@@ -1,0 +1,54 @@
+"""Fig 18 analogue: stack all three case-study optimizations (fused data
+path + 8 workers + 8 host threads) per paper network and report combined
+end-to-end latency reduction vs the baseline (DMA, 1 accelerator, 1
+thread).  Paper: 42-80% reduction (1.8-5x)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs.paper_nets import PAPER_NETS
+from repro.core.interfaces import acp_transfer, dma_transfer
+from repro.core.scheduler import simulate
+from repro.core.tiling import VMEM_BYTES
+from benchmarks.common import build_paper_graph
+
+
+def _endtoend(net, *, n_acc, fused, host_threads):
+    g = build_paper_graph(net, batch=1)
+    tasks = g.tile_tasks(batch=1, max_tile_elems=16384)
+    tl = simulate(tasks, n_acc, shared_bw_penalty=0.05)
+    accel = tl.makespan
+    xfer = host = 0.0
+    for node in g.nodes.values():
+        if node.op in ("input", "weight"):
+            continue
+        nbytes = int(np.prod(node.shape)) * 4
+        n_tiles = max(1, nbytes // (16384 * 4))
+        if fused:
+            resident = 1.0 if nbytes < VMEM_BYTES // 4 else 0.5
+            xfer += acp_transfer(nbytes, resident).seconds
+        else:
+            xfer += dma_transfer(nbytes, n_tiles).seconds
+        # host tiling/untiling: bandwidth-limited, scaled by threads
+        host += 2 * nbytes / 20e9 / host_threads + 3e-6
+    return accel + xfer + host, (accel, xfer, host)
+
+
+def run(emit=print):
+    rows = []
+    for name, net in PAPER_NETS.items():
+        base, parts_b = _endtoend(net, n_acc=1, fused=False, host_threads=1)
+        opt, parts_o = _endtoend(net, n_acc=8, fused=True, host_threads=8)
+        rows.append({
+            "name": f"combined/{name}",
+            "us_per_call": round(opt * 1e6, 1),
+            "derived": (f"baseline_us={base*1e6:.1f} "
+                        f"speedup={base/opt:.2f}x "
+                        f"reduction={(1-opt/base)*100:.0f}% "
+                        f"(paper: 1.8-5x, 42-80%)")})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

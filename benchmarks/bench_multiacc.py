@@ -1,0 +1,37 @@
+"""Fig 12/13 analogue: multi-accelerator (worker) scaling via the runtime-
+scheduler simulation on the paper's networks, including the reduction-
+affinity cap and shared-bandwidth contention."""
+from __future__ import annotations
+
+from repro.configs.paper_nets import PAPER_NETS
+from benchmarks.common import build_paper_graph
+
+
+def run(emit=print):
+    from repro.core.scheduler import simulate
+    rows = []
+    for name in ("minerva", "lenet5", "cnn10", "vgg16", "elu16"):
+        net = PAPER_NETS[name]
+        g = build_paper_graph(net, batch=1)
+        tasks = g.tile_tasks(batch=1, max_tile_elems=2048)
+        # small tiles ~ the paper's 32KB scratchpads -> rich tile-level parallelism
+        base = None
+        for n_acc in (1, 2, 4, 8):
+            tl = simulate(tasks, n_acc, shared_bw_penalty=0.05)
+            if base is None:
+                base = tl.makespan
+            speed = base / tl.makespan
+            kinds = tl.per_kind()
+            rows.append({
+                "name": f"multiacc/{name}/acc{n_acc}",
+                "us_per_call": round(tl.makespan * 1e6, 1),
+                "derived": (f"speedup={speed:.2f}x "
+                            f"util={tl.utilization():.2f} "
+                            f"xfer_s={kinds.get('transfer', 0):.2e} "
+                            f"tiles={len(tasks)}")})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

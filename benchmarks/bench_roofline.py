@@ -1,0 +1,61 @@
+"""§Roofline source: the three roofline terms per (arch x shape) cell from
+the dry-run artifact (single-pod mesh), with bottleneck + useful-FLOPs
+ratio.  This is the table EXPERIMENTS.md §Roofline embeds."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.configs import get_config
+from repro.core.config import SHAPE_BY_NAME
+from repro.core.simulator import roofline
+
+
+def compute_all(mesh_name="pod16x16"):
+    res_path = Path("experiments/dryrun/results.json")
+    res = json.loads(res_path.read_text())
+    out = {}
+    for key, r in sorted(res.items()):
+        if r["mesh"] != mesh_name:
+            continue
+        if r["status"] == "skip":
+            out[key] = {"status": "skip", "reason": r["reason"],
+                        "arch": r["arch"], "shape": r["shape"]}
+            continue
+        if r["status"] != "ok":
+            continue
+        cfg = get_config(r["arch"])
+        shape = SHAPE_BY_NAME[r["shape"]]
+        n_chips = 512 if "2x16" in mesh_name else 256
+        rl = roofline(r["hlo"], cfg, shape, n_chips)
+        from repro.core.simulator import energy
+        e = energy(r["hlo"], rl.step_s, n_chips)
+        out[key] = {"status": "ok", "arch": r["arch"], "shape": r["shape"],
+                    **rl.to_dict(),
+                    "energy_j_per_chip": e["total_j"],
+                    "energy_j_total": e["total_j_all_chips"]}
+    return out
+
+
+def run(emit=print):
+    rows = []
+    for key, r in compute_all().items():
+        if r["status"] == "skip":
+            rows.append({"name": f"roofline/{r['arch']}/{r['shape']}",
+                         "us_per_call": "", "derived": f"SKIP: {r['reason']}"})
+            continue
+        rows.append({
+            "name": f"roofline/{r['arch']}/{r['shape']}",
+            "us_per_call": round(r["step_s"] * 1e6, 1),
+            "derived": (f"compute={r['compute_s']:.2e}s "
+                        f"memory={r['memory_s']:.2e}s "
+                        f"coll={r['collective_s']:.2e}s "
+                        f"bound={r['bound']} "
+                        f"useful={r['useful_ratio']*100:.0f}% "
+                        f"roofline_frac={r['roofline_fraction']*100:.1f}%")})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

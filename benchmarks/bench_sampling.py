@@ -1,0 +1,77 @@
+"""Fig 8 analogue: sampled-simulation error across kernels and shapes.
+
+Measures real wall time of S/M/L convolution-as-matmul, attention, and
+scan kernels at full iteration counts vs the 2-point sampled estimate
+unsampled through the loop tree; reports relative error (paper: <=6%,
+avg ~1%).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sampling import measure_sampled, sampling_error, unsample
+
+
+def _timed(fn):
+    fn()  # compile
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+def _loop_cost(body, n, repeat=5):
+    """Wall time of running `body` n times (jitted scan of length n).
+    min-of-N to suppress scheduler noise on this shared 1-core host."""
+    @jax.jit
+    def run(x):
+        def step(c, _):
+            return body(c), ()
+        y, _ = jax.lax.scan(step, x, None, length=n)
+        return y
+    x = jnp.ones((512, 128), jnp.float32)
+    run(x).block_until_ready()
+    best = float("inf")
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        run(x).block_until_ready()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(emit=print):
+    w_s = jnp.ones((128, 128), jnp.float32) * 0.01
+    w_m = jnp.ones((128, 1024), jnp.float32) * 0.01
+    cases = {
+        # paper: S-Conv 16x1x1x8 / M-Conv 64 2x2x16 / L-Conv 256 3x3x64 —
+        # conv lowers to matmul on the MXU, so sizes map to matmul dims
+        "s_conv": lambda c: jnp.tanh(c @ w_s),
+        "m_conv": lambda c: jnp.tanh((c @ w_m) @ w_m.T),
+        "l_conv": lambda c: jnp.tanh((c @ w_m) @ (w_m.T @ (w_s + 0.001))),
+        "elementwise": lambda c: jnp.exp(jnp.sin(c) * 0.5),
+    }
+    rows = []
+    errs = []
+    for name, body in cases.items():
+        trips = 64
+        true = _loop_cost(body, trips)
+        node = measure_sampled(lambda n: _loop_cost(body, n), trips=trips,
+                               sample=2)  # most aggressive sampling
+        est = unsample(node)
+        err = sampling_error(est, true)
+        errs.append(err)
+        rows.append({"name": f"sampling/{name}",
+                     "us_per_call": round(true * 1e6, 1),
+                     "derived": f"est={est*1e6:.1f}us err={err*100:.2f}%"})
+    rows.append({"name": "sampling/avg_error",
+                 "us_per_call": "",
+                 "derived": f"{np.mean(errs)*100:.2f}% (paper: avg 1%, max 6%)"})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,33 @@
+"""Fig 10 analogue: 'simulation time' — wall time to lower + compile +
+analyze each architecture's production step (our pre-silicon evaluation
+loop), read from the dry-run artifact."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+
+def run(emit=print):
+    res_path = Path("experiments/dryrun/results.json")
+    if not res_path.exists():
+        return [{"name": "simtime/missing", "us_per_call": "",
+                 "derived": "run repro.launch.dryrun first"}]
+    res = json.loads(res_path.read_text())
+    rows = []
+    per_arch = {}
+    for r in res.values():
+        if r["status"] != "ok":
+            continue
+        per_arch.setdefault(r["arch"], []).append(
+            r.get("lower_s", 0) + r.get("compile_s", 0))
+    for arch, ts in sorted(per_arch.items()):
+        rows.append({"name": f"simtime/{arch}",
+                     "us_per_call": round(sum(ts) / len(ts) * 1e6, 1),
+                     "derived": (f"cells={len(ts)} total_s={sum(ts):.1f} "
+                                 f"(paper: minutes-to-hours per network)")})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

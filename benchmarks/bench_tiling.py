@@ -1,0 +1,61 @@
+"""Fig 6 analogue: tiling-strategy transformation cost, measured + modeled.
+
+Tiles a medium (1x16x16x128) and large (1x64x64x512) NHWC tensor with each
+feasible strategy; MEASURES real host memcpy time (numpy, the framework's
+data-preparation path) and reports the tiling optimizer's modeled cost next
+to it.  Paper result to reproduce: row-wise tiling is ~1.8x faster than
+channel-wise on the medium tensor, and DimHW ~6.5x cheaper than DimCH on the
+large one.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.tensor import TensorSpec
+from repro.core.tiling import enumerate_tilings
+
+
+def materialize_tiles(arr: np.ndarray, tile):
+    """Copy every tile into its own contiguous buffer (data preparation)."""
+    shape = arr.shape
+    outs = []
+    for i0 in range(0, shape[0], tile[0]):
+        for i1 in range(0, shape[1], tile[1]):
+            for i2 in range(0, shape[2], tile[2]):
+                for i3 in range(0, shape[3], tile[3]):
+                    outs.append(np.ascontiguousarray(
+                        arr[i0:i0 + tile[0], i1:i1 + tile[1],
+                            i2:i2 + tile[2], i3:i3 + tile[3]]))
+    return outs
+
+
+def run(emit=print):
+    rows = []
+    for shape in [(1, 16, 16, 128), (1, 64, 64, 512)]:
+        spec = TensorSpec(shape, "NHWC", "float32")
+        arr = np.random.default_rng(0).standard_normal(shape).astype(
+            np.float32)
+        cands = {c.strategy: c for c in
+                 enumerate_tilings(spec, 16384, reduce_dim="C",
+                                   reduce_quantum=32)}
+        for strat in sorted(cands):
+            c = cands[strat]
+            if c.n_tiles > 4096:
+                continue
+            t0 = time.perf_counter()
+            for _ in range(3):
+                materialize_tiles(arr, c.tile_shape)
+            meas = (time.perf_counter() - t0) / 3
+            rows.append({"name": f"tiling/{shape}/{strat}",
+                         "us_per_call": round(meas * 1e6, 1),
+                         "derived": (f"modeled={c.host_cost_s*1e6:.1f}us "
+                                     f"memcpys={c.n_memcpys} "
+                                     f"run={c.contiguous_run}")})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,24 @@
+"""Shared helpers for the paper-figure benchmarks."""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+from repro.apps.paper_graphs import build_paper_graph  # noqa: F401
+
+def timeit(fn, *args, repeat: int = 3, warmup: int = 1) -> float:
+    for _ in range(warmup):
+        fn(*args)
+    ts = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn(*args)
+        ts.append(time.perf_counter() - t0)
+    return min(ts)
+
+
+def emit(rows: List[Dict], header: List[str]):
+    """name,us_per_call,derived CSV convention (benchmarks/run.py)."""
+    print(",".join(header))
+    for r in rows:
+        print(",".join(str(r.get(h, "")) for h in header))

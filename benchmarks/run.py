@@ -1,0 +1,50 @@
+"""Benchmark driver: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV per the harness convention.
+
+  PYTHONPATH=src python -m benchmarks.run [--only NAME]
+"""
+import argparse
+import importlib
+import sys
+import traceback
+
+MODULES = [
+    ("breakdown", "Fig 1  — end-to-end latency breakdown"),
+    ("tiling", "Fig 6  — tiling-strategy transformation cost"),
+    ("sampling", "Fig 8  — sampled-simulation error"),
+    ("simtime", "Fig 10 — evaluation-loop (lower+compile) time"),
+    ("interfaces", "Fig 11 — DMA vs fused/resident data path"),
+    ("multiacc", "Fig 12/13 — multi-accelerator scaling"),
+    ("hostpipe", "Fig 15/16/17 — multithreaded data preparation"),
+    ("combined", "Fig 18 — combined optimizations"),
+    ("timeline", "Fig 14 — utilization timeline"),
+    ("camera", "Fig 19/20 — camera vision pipeline"),
+    ("roofline", "§Roofline — per-cell roofline terms"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    failures = 0
+    print("name,us_per_call,derived")
+    for mod_name, title in MODULES:
+        if args.only and args.only != mod_name:
+            continue
+        print(f"# === bench_{mod_name}: {title} ===", flush=True)
+        try:
+            mod = importlib.import_module(f"benchmarks.bench_{mod_name}")
+            for row in mod.run():
+                print(f"{row['name']},{row['us_per_call']},"
+                      f"\"{row['derived']}\"", flush=True)
+        except Exception:  # noqa: BLE001
+            failures += 1
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,63 @@
+"""Batched serving example: prefill a batch of prompts, then decode with a
+shared KV cache — greedy continuation of synthetic prompts.
+
+  PYTHONPATH=src python examples/serve_batch.py --arch gemma3_1b --tokens 16
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.models import transformer as T
+from repro.serve import make_decode_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3_1b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--tokens", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    params, _ = T.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(rng.integers(
+        0, cfg.vocab, (args.batch, args.prompt_len)), jnp.int32)
+    batch = {"tokens": prompts}
+    if cfg.family == "encdec":
+        batch["frames"] = jnp.ones(
+            (args.batch, cfg.encoder.n_ctx, cfg.d_model), jnp.float32) * .1
+    if cfg.family == "vlm":
+        batch["patches"] = jnp.ones(
+            (args.batch, cfg.n_patches, cfg.d_model), jnp.float32) * .1
+
+    max_seq = args.prompt_len + cfg.n_patches + args.tokens
+    t0 = time.time()
+    logits, cache = jax.jit(
+        lambda p, b: T.prefill_forward(cfg, p, b, max_seq=max_seq)
+    )(params, batch)
+    tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+    print(f"prefill {args.batch}x{args.prompt_len} in {time.time()-t0:.2f}s")
+
+    decode = jax.jit(make_decode_step(cfg), donate_argnums=(1,))
+    out = [tok]
+    pos0 = args.prompt_len + (cfg.n_patches if cfg.family == "vlm" else 0)
+    t0 = time.time()
+    for i in range(args.tokens - 1):
+        tok, cache = decode(params, cache, tok,
+                            jnp.asarray(pos0 + i, jnp.int32))
+        out.append(tok)
+    dt = time.time() - t0
+    gen = jnp.concatenate(out, axis=1)
+    print(f"decoded {args.tokens-1} steps in {dt:.2f}s "
+          f"({args.batch*(args.tokens-1)/max(dt,1e-9):.1f} tok/s)")
+    print("generated ids:\n", np.asarray(gen))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""Camera ISP pipeline (paper §V, Halide pipeline re-implemented in JAX).
+
+Stages (matching the paper's description): hot-pixel suppression,
+deinterleave (Bayer planes), demosaic (bilinear), white balance, color
+correction, gamma, sharpen, and downsample to the DNN input size.
+
+Raw input: (H, W) Bayer-mosaic (RGGB) sensor values in [0, 1).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def hot_pixel_suppression(raw):
+    """Clamp each pixel to the max/min of its 4 same-color neighbours."""
+    p = jnp.pad(raw, 2, mode="edge")
+    n = jnp.stack([p[:-4, 2:-2], p[4:, 2:-2], p[2:-2, :-4], p[2:-2, 4:]])
+    return jnp.clip(raw, n.min(0), n.max(0))
+
+
+def deinterleave(raw):
+    """RGGB Bayer -> 4 half-res planes (r, g0, g1, b)."""
+    return (raw[0::2, 0::2], raw[0::2, 1::2], raw[1::2, 0::2],
+            raw[1::2, 1::2])
+
+
+def demosaic(r, g0, g1, b):
+    """Bilinear demosaic to full-res RGB (half-res planes upsampled)."""
+    def up(x):
+        x2 = jnp.repeat(jnp.repeat(x, 2, 0), 2, 1)
+        k = jnp.array([[0.25, 0.5, 0.25]])
+        x2 = jax.scipy.signal.convolve2d(x2, k.T @ k, mode="same") \
+            / jax.scipy.signal.convolve2d(jnp.ones_like(x2), k.T @ k,
+                                          mode="same")
+        return x2
+    g = (up(g0) + up(g1)) * 0.5
+    return jnp.stack([up(r), g, up(b)], axis=-1)
+
+
+def white_balance(rgb, gains=(2.0, 1.0, 1.6)):
+    return rgb * jnp.asarray(gains)[None, None]
+
+
+def color_correct(rgb):
+    ccm = jnp.asarray([[1.6, -0.4, -0.2],
+                       [-0.3, 1.5, -0.2],
+                       [-0.1, -0.5, 1.6]])
+    return jnp.clip(rgb @ ccm.T, 0.0, 1.0)
+
+
+def gamma(rgb, g=2.2):
+    return jnp.power(jnp.clip(rgb, 1e-6, 1.0), 1.0 / g)
+
+
+def sharpen(rgb, amount=0.6):
+    k = jnp.asarray([[0, -1, 0], [-1, 5.0, -1], [0, -1, 0]]) / 1.0
+
+    def conv1(ch):
+        return jax.scipy.signal.convolve2d(ch, k, mode="same")
+    sharp = jnp.stack([conv1(rgb[..., i]) for i in range(3)], axis=-1)
+    return jnp.clip((1 - amount) * rgb + amount * sharp, 0.0, 1.0)
+
+
+def downsample(rgb, out_hw):
+    H, W, _ = rgb.shape
+    oh, ow = out_hw
+    fh, fw = H // oh, W // ow
+    return rgb[:oh * fh, :ow * fw].reshape(oh, fh, ow, fw, 3).mean((1, 3))
+
+
+@functools.partial(jax.jit, static_argnames=("dnn_hw",))
+def camera_pipeline(raw, dnn_hw=(32, 32)):
+    """Full ISP: raw Bayer -> RGB frame + downsampled DNN input."""
+    raw = hot_pixel_suppression(raw)
+    planes = deinterleave(raw)
+    rgb = demosaic(*planes)
+    rgb = white_balance(rgb)
+    rgb = color_correct(rgb)
+    rgb = gamma(rgb)
+    rgb = sharpen(rgb)
+    return rgb, downsample(rgb, dnn_hw)

@@ -1,0 +1,232 @@
+"""Declarative Python graph frontend (paper §II-A, Fig 2).
+
+Networks are built inside a ``Graph`` context with deferred execution,
+serialized (topology JSON + parameters npz), then executed by the runtime —
+here a jnp executor with an operator-fusion pass (conv/matmul + bias +
+elementwise, as the paper applies automatically) — or mapped to tile tasks
+for the multi-accelerator scheduler simulation.
+
+Example (the paper's residual unit):
+
+    with Graph(name="residual", backend="mxu") as g:
+        act = input_data("input", np.random.rand(1, 32, 32, 8))
+        f0 = weight("f0", np.random.rand(3, 3, 8, 64))
+        x = convolution("conv0", act, f0, stride=1, padding="same",
+                        activation="relu")
+        ...
+        add("add", x, act, activation="relu")
+    g.write_graph("residual")
+"""
+from __future__ import annotations
+
+import json
+import threading
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+_CURRENT: List["Graph"] = []
+
+
+@dataclass
+class Node:
+    name: str
+    op: str
+    inputs: List[str]
+    attrs: Dict = field(default_factory=dict)
+    shape: Tuple[int, ...] = ()
+
+
+class GraphTensor:
+    def __init__(self, name: str, shape, graph: "Graph"):
+        self.name = name
+        self.shape = tuple(shape)
+        self.graph = graph
+
+
+class Graph:
+    def __init__(self, name: str, backend: str = "mxu"):
+        self.name = name
+        self.backend = backend
+        self.nodes: Dict[str, Node] = {}
+        self.order: List[str] = []
+        self.params: Dict[str, np.ndarray] = {}
+        self.inputs: List[str] = []
+        self.outputs: List[str] = []
+
+    # -- context manager ----------------------------------------------------
+    def __enter__(self):
+        _CURRENT.append(self)
+        return self
+
+    def __exit__(self, *exc):
+        _CURRENT.pop()
+        # outputs = nodes nobody consumes
+        consumed = {i for n in self.nodes.values() for i in n.inputs}
+        self.outputs = [n for n in self.order if n not in consumed]
+        return False
+
+    def add_node(self, node: Node) -> GraphTensor:
+        if node.name in self.nodes:
+            raise ValueError(f"duplicate node {node.name}")
+        self.nodes[node.name] = node
+        self.order.append(node.name)
+        return GraphTensor(node.name, node.shape, self)
+
+    # -- serialization ------------------------------------------------------
+    def write_graph(self, path: str):
+        p = Path(path)
+        topo = {"name": self.name, "backend": self.backend,
+                "inputs": self.inputs, "outputs": self.outputs,
+                "nodes": [{"name": n.name, "op": n.op, "inputs": n.inputs,
+                           "attrs": n.attrs, "shape": list(n.shape)}
+                          for n in (self.nodes[k] for k in self.order)]}
+        p.with_suffix(".json").write_text(json.dumps(topo, indent=1))
+        # parameters stored separately so they can be swapped (paper §II-A)
+        np.savez(p.with_suffix(".npz"), **self.params)
+        return p
+
+    @classmethod
+    def read_graph(cls, path: str) -> "Graph":
+        p = Path(path)
+        topo = json.loads(p.with_suffix(".json").read_text())
+        g = cls(topo["name"], topo["backend"])
+        for nd in topo["nodes"]:
+            g.add_node(Node(nd["name"], nd["op"], nd["inputs"], nd["attrs"],
+                            tuple(nd["shape"])))
+        g.inputs = topo["inputs"]
+        g.outputs = topo["outputs"]
+        if p.with_suffix(".npz").exists():
+            g.params = dict(np.load(p.with_suffix(".npz")))
+        return g
+
+    # -- execution ----------------------------------------------------------
+    def execute(self, feeds: Dict[str, np.ndarray], fuse: bool = True):
+        """Topological jnp execution with the automatic fusion pass."""
+        import jax.numpy as jnp
+        from repro.core import graph_ops as ops
+        vals: Dict[str, jnp.ndarray] = {}
+        fused_into: Dict[str, str] = self.fusion_plan() if fuse else {}
+        for name in self.order:
+            n = self.nodes[name]
+            if n.op == "input":
+                vals[name] = jnp.asarray(feeds[name])
+                continue
+            if n.op == "weight":
+                vals[name] = jnp.asarray(self.params[name])
+                continue
+            if name in fused_into:      # consumed by its fused producer
+                continue
+            vals[name] = ops.run_node(self, n, vals, fused_into)
+        return {o: np.asarray(vals[o]) for o in self.outputs if o in vals}
+
+    def fusion_plan(self) -> Dict[str, str]:
+        """conv/matmul + following elementwise (relu/add-bias) fusion: maps
+        fused-consumer name -> producer it is folded into."""
+        plan: Dict[str, str] = {}
+        consumers: Dict[str, List[str]] = {}
+        for n in self.nodes.values():
+            for i in n.inputs:
+                consumers.setdefault(i, []).append(n.name)
+        for n in self.nodes.values():
+            if n.op in ("convolution", "matmul") and \
+                    not n.attrs.get("activation"):
+                cons = consumers.get(n.name, [])
+                if len(cons) == 1:
+                    c = self.nodes[cons[0]]
+                    if c.op in ("relu", "gelu"):
+                        plan[c.name] = n.name
+        return plan
+
+    # -- tiling/scheduling view ---------------------------------------------
+    def tile_tasks(self, batch: int = 1, max_tile_elems: int = 16384):
+        """Map each op to TileTasks for the scheduler simulation (Fig 12)."""
+        from repro.core.graph_ops import node_cost
+        from repro.core.scheduler import TileTask
+        tasks: List[TileTask] = []
+        for name in self.order:
+            n = self.nodes[name]
+            if n.op in ("input", "weight"):
+                continue
+            tasks.extend(node_cost(self, n, batch, max_tile_elems))
+        return tasks
+
+
+def current_graph() -> Graph:
+    if not _CURRENT:
+        raise RuntimeError("no active Graph context")
+    return _CURRENT[-1]
+
+
+# ---------------------------------------------------------------------------
+# builder API (paper Fig 2 style)
+
+
+def input_data(name: str, array) -> GraphTensor:
+    g = current_graph()
+    arr = np.asarray(array)
+    g.inputs.append(name)
+    return g.add_node(Node(name, "input", [], {}, arr.shape))
+
+
+def weight(name: str, array) -> GraphTensor:
+    g = current_graph()
+    arr = np.asarray(array, dtype=np.float32)
+    g.params[name] = arr
+    return g.add_node(Node(name, "weight", [], {}, arr.shape))
+
+
+def convolution(name, x: GraphTensor, w: GraphTensor, *, stride=1,
+                padding="same", activation=None) -> GraphTensor:
+    g = current_graph()
+    kh, kw, cin, cout = w.shape
+    n, h, ww_, c = x.shape
+    if padding == "same":
+        oh, ow = (h + stride - 1) // stride, (ww_ + stride - 1) // stride
+    else:
+        oh, ow = (h - kh) // stride + 1, (ww_ - kw) // stride + 1
+    return g.add_node(Node(name, "convolution", [x.name, w.name],
+                           {"stride": stride, "padding": padding,
+                            "activation": activation}, (n, oh, ow, cout)))
+
+
+def matmul(name, x: GraphTensor, w: GraphTensor, *, activation=None):
+    g = current_graph()
+    shape = (*x.shape[:-1], w.shape[-1])
+    return g.add_node(Node(name, "matmul", [x.name, w.name],
+                           {"activation": activation}, shape))
+
+
+def add(name, a: GraphTensor, b: GraphTensor, *, activation=None):
+    g = current_graph()
+    return g.add_node(Node(name, "add", [a.name, b.name],
+                           {"activation": activation}, a.shape))
+
+
+def relu(name, x: GraphTensor):
+    g = current_graph()
+    return g.add_node(Node(name, "relu", [x.name], {}, x.shape))
+
+
+def max_pool(name, x: GraphTensor, k: int = 2):
+    g = current_graph()
+    n, h, w, c = x.shape
+    return g.add_node(Node(name, "max_pool", [x.name], {"k": k},
+                           (n, h // k, w // k, c)))
+
+
+def batch_norm(name, x: GraphTensor):
+    g = current_graph()
+    gr = current_graph()
+    gr.params[name + "_scale"] = np.ones((x.shape[-1],), np.float32)
+    gr.params[name + "_bias"] = np.zeros((x.shape[-1],), np.float32)
+    return g.add_node(Node(name, "batch_norm", [x.name], {}, x.shape))
+
+
+def flatten(name, x: GraphTensor):
+    g = current_graph()
+    n = x.shape[0]
+    rest = int(np.prod(x.shape[1:]))
+    return g.add_node(Node(name, "flatten", [x.name], {}, (n, rest)))

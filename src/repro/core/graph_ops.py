@@ -1,0 +1,124 @@
+"""Graph-node executors (jnp) + per-node tile/cost mapping.
+
+Convolutions lower to im2col matmuls — the NVDLA channel-reduction dataflow
+adapted to the MXU contraction dimension (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.simulator import HBM_BW, PEAK_FLOPS
+from repro.core.tensor import TensorSpec
+from repro.core.tiling import choose_tiling
+
+
+def _activation(kind, x):
+    if kind == "relu":
+        return jax.nn.relu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x)
+    return x
+
+
+def run_node(g, n, vals: Dict, fused_into: Dict[str, str]):
+    x = vals[n.inputs[0]] if n.inputs else None
+    if n.op == "convolution":
+        w = vals[n.inputs[1]]
+        stride = n.attrs.get("stride", 1)
+        pad = n.attrs.get("padding", "same").upper()
+        out = jax.lax.conv_general_dilated(
+            x, w, (stride, stride), pad,
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        out = _activation(n.attrs.get("activation"), out)
+    elif n.op == "matmul":
+        w = vals[n.inputs[1]]
+        xx = x.reshape(x.shape[0], -1) if x.ndim > 2 else x
+        out = _activation(n.attrs.get("activation"), xx @ w)
+    elif n.op == "add":
+        out = _activation(n.attrs.get("activation"),
+                          x + vals[n.inputs[1]])
+    elif n.op == "relu":
+        out = jax.nn.relu(x)
+    elif n.op == "max_pool":
+        k = n.attrs.get("k", 2)
+        out = jax.lax.reduce_window(
+            x, -jnp.inf, jax.lax.max, (1, k, k, 1), (1, k, k, 1), "VALID")
+    elif n.op == "batch_norm":
+        scale = jnp.asarray(g.params[n.name + "_scale"])
+        bias = jnp.asarray(g.params[n.name + "_bias"])
+        mu = jnp.mean(x, axis=(0, 1, 2), keepdims=True)
+        var = jnp.var(x, axis=(0, 1, 2), keepdims=True)
+        out = (x - mu) * jax.lax.rsqrt(var + 1e-5) * scale + bias
+    elif n.op == "flatten":
+        out = x.reshape(n.shape)
+    else:
+        raise ValueError(f"unknown op {n.op}")
+    # apply any elementwise op fused into this node
+    for consumer, producer in fused_into.items():
+        if producer == n.name:
+            cn = g.nodes[consumer]
+            if cn.op in ("relu", "gelu"):
+                out = _activation(cn.op, out)
+            vals[consumer] = out
+    return out
+
+
+def node_flops_bytes(n, batch: int = 1):
+    """(flops, bytes) of one node at the given batch."""
+    elems_out = int(np.prod(n.shape)) * batch // max(n.shape[0], 1)
+    if n.op == "convolution":
+        kh, kw, cin, cout = (0, 0, 0, 0)
+        flops = 0
+        # attrs carry stride; kernel shape from the weight input is not
+        # stored on the node, so approximate from attrs if present
+        k = n.attrs.get("kernel", 3)
+        cin = n.attrs.get("cin", n.shape[-1])
+        flops = 2 * elems_out * k * k * cin
+        return flops, 4 * (elems_out * 2)
+    if n.op == "matmul":
+        cin = n.attrs.get("cin", n.shape[-1])
+        flops = 2 * elems_out * cin
+        return flops, 4 * (elems_out * 2 + cin * n.shape[-1])
+    return elems_out, 4 * elems_out * 2
+
+
+def node_cost(g, n, batch: int, max_tile_elems: int) -> List:
+    """Map a node to TileTasks via the tiling optimizer."""
+    from repro.core.scheduler import TileTask
+    if n.op in ("input", "weight"):
+        return []
+    # resolve real kernel/cin from producer weight node when available
+    if n.op in ("convolution", "matmul") and len(n.inputs) > 1:
+        wshape = g.nodes[n.inputs[1]].shape
+        if n.op == "convolution":
+            n.attrs.setdefault("kernel", wshape[0])
+            n.attrs.setdefault("cin", wshape[2])
+        else:
+            n.attrs.setdefault("cin", wshape[0])
+    flops, nbytes = node_flops_bytes(n, batch)
+    shape4 = tuple(n.shape) if len(n.shape) == 4 else \
+        (1, 1, 1, int(np.prod(n.shape)))
+    spec = TensorSpec(shape4, "NHWC", "float32")
+    tiling = choose_tiling(spec, max_tile_elems,
+                           reduce_dim="C" if n.op in ("convolution", "matmul")
+                           else None)
+    n_tiles = max(tiling.n_tiles, 1)
+    per_tile_s = max(flops / n_tiles / PEAK_FLOPS, 1e-9)
+    per_tile_xfer = nbytes / n_tiles / HBM_BW
+    # reduction affinity: convolution tiles that cut the channel (reduce) dim
+    # must land on one queue (in-place partial sums, paper Fig 14)
+    reduce_affinity = "C" in tiling.strategy and n.op == "convolution"
+    tasks = []
+    for i in range(n_tiles):
+        tasks.append(TileTask(
+            name=f"{n.name}/t{i}", duration=per_tile_s,
+            transfer=per_tile_xfer,
+            affinity=(n.name if reduce_affinity else None),
+            deps=tuple(f"{d}/t0" for d in n.inputs
+                       if d in g.nodes and g.nodes[d].op not in
+                       ("input", "weight"))))
+    return tasks

@@ -1,0 +1,482 @@
+"""Compiled-HLO analyzer — the "trace reader" of the simulator.
+
+XLA's ``compiled.cost_analysis()`` counts every ``while`` body exactly ONCE
+(verified empirically; see EXPERIMENTS.md §Dry-run), so for scan-over-layers
+models it reports one layer, not L.  This module re-derives FLOPs / bytes /
+collective-bytes from ``compiled.as_text()`` with **loop-tree unsampling**:
+per-computation costs are computed bottom-up and ``while`` bodies are
+multiplied by their trip counts — the direct analogue of SMAUG's
+``setSamplingFactor`` + loop-tree unsampling (paper §II-E1): the compiled
+HLO *is* the sampled trace, and the static loop tree restores the full run.
+
+Costing model:
+  flops            dot/conv: exact from shapes; elementwise/reduce: #elems
+  transcendentals  exp/log/tanh/... element counts
+  bytes            per top-level instruction: operand+output buffer sizes
+                   (fusions are costed at their boundary, like XLA does)
+  collective_bytes sum of operand sizes of all-gather / all-reduce /
+                   reduce-scatter / all-to-all / collective-permute
+                   (the assignment's definition), multiplied through loops
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "s4": 1, "s8": 1, "u2": 1, "u4": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "opaque": 0, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3b11fnuz": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1, "e4m3": 1,
+    "e5m2": 1,
+}
+
+_TRANSCENDENTAL_OPS = {
+    "exponential", "exponential-minus-one", "log", "log-plus-one", "tanh",
+    "rsqrt", "sqrt", "power", "sine", "cosine", "logistic", "atan2", "erf",
+    "cbrt",
+}
+
+_COLLECTIVE_OPS = {
+    "all-gather", "all-gather-start", "all-reduce", "all-reduce-start",
+    "reduce-scatter", "all-to-all", "collective-permute",
+    "collective-permute-start", "ragged-all-to-all",
+}
+
+_ZERO_COST_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "reshape",
+    "broadcast", "transpose", "convert", "copy", "copy-start", "copy-done",
+    "slice", "dynamic-slice", "dynamic-update-slice", "pad", "reverse",
+    "concatenate", "gather", "scatter", "rng-bit-generator",
+    "rng-get-and-update-state", "opt-barrier", "custom-call", "bitcast-convert",
+    "all-gather-done", "all-reduce-done", "collective-permute-done",
+    "send", "send-done", "recv", "recv-done", "domain", "add-dependency",
+}
+# ^ zero FLOP cost; bytes still counted (data movement is their real cost)
+
+
+@dataclass
+class Shape:
+    bytes: int
+    elems: int
+
+
+@dataclass
+class Instr:
+    name: str
+    op: str
+    shape: Shape
+    operands: List[str]
+    attrs: str
+    is_root: bool = False
+    raw_args: str = ""
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+    table: Dict[str, Instr] = field(default_factory=dict)
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    dot_flops: float = 0.0
+    transcendentals: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    wire_bytes: float = 0.0
+    collectives: Dict[str, Dict[str, float]] = field(default_factory=dict)
+    n_while: int = 0
+    custom_calls: Dict[str, int] = field(default_factory=dict)
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.dot_flops += other.dot_flops * mult
+        self.transcendentals += other.transcendentals * mult
+        self.bytes += other.bytes * mult
+        self.collective_bytes += other.collective_bytes * mult
+        self.wire_bytes += other.wire_bytes * mult
+        for k, v in other.collectives.items():
+            slot = self.collectives.setdefault(k, {"count": 0, "bytes": 0.0})
+            slot["count"] += v["count"] * mult
+            slot["bytes"] += v["bytes"] * mult
+        self.n_while += int(other.n_while * mult)
+        for k, v in other.custom_calls.items():
+            self.custom_calls[k] = self.custom_calls.get(k, 0) + v
+
+    def to_dict(self):
+        return {
+            "flops": self.flops, "dot_flops": self.dot_flops,
+            "transcendentals": self.transcendentals, "bytes": self.bytes,
+            "collective_bytes": self.collective_bytes,
+            "wire_bytes": self.wire_bytes,
+            "collectives": self.collectives, "n_while": self.n_while,
+            "custom_calls": self.custom_calls,
+        }
+
+
+# ---------------------------------------------------------------------------
+# type parsing
+
+
+def _skip_ws_comments(s: str, pos: int) -> int:
+    while pos < len(s):
+        if s[pos] == " ":
+            pos += 1
+        elif s.startswith("/*", pos):
+            end = s.find("*/", pos)
+            pos = len(s) if end < 0 else end + 2
+        else:
+            break
+    return pos
+
+
+def _parse_type(s: str, pos: int = 0) -> Tuple[Shape, int]:
+    """Parse a type at s[pos:]; returns (Shape, next position)."""
+    if s[pos] == "(":
+        total, elems = 0, 0
+        pos += 1
+        while pos < len(s) and s[pos] != ")":
+            sh, new_pos = _parse_type(s, pos)
+            total += sh.bytes
+            elems += sh.elems
+            pos = new_pos if new_pos > pos else pos + 1  # always progress
+            pos = _skip_ws_comments(s, pos)
+            if pos < len(s) and s[pos] == ",":
+                pos = _skip_ws_comments(s, pos + 1)
+        return Shape(total, elems), min(pos + 1, len(s))
+    m = re.match(r"([a-z0-9]+)\[([0-9,]*)\]", s[pos:])
+    if not m:
+        return Shape(0, 0), pos  # token / unknown
+    dtype, dims = m.group(1), m.group(2)
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    nbytes = _DTYPE_BYTES.get(dtype, 4) * n
+    pos += m.end()
+    if pos < len(s) and s[pos] == "{":  # layout
+        depth = 0
+        while pos < len(s):
+            if s[pos] == "{":
+                depth += 1
+            elif s[pos] == "}":
+                depth -= 1
+                if depth == 0:
+                    pos += 1
+                    break
+            pos += 1
+    return Shape(nbytes, n), pos
+
+
+_INSTR_RE = re.compile(
+    r"^\s*(ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+)$")
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->\s*.*\{\s*$")
+
+
+# ---------------------------------------------------------------------------
+# costing
+
+
+def _attr_ref(attrs: str, key: str) -> Optional[str]:
+    m = re.search(key + r"=%?([\w.\-]+)", attrs)
+    return m.group(1) if m else None
+
+
+def analyze_hlo(text: str) -> Dict:
+    """Top-level entry: returns the unsampled cost dictionary."""
+    comps, entry, dims_table, const_table = _parse_full(text)
+    cache: Dict[str, Cost] = {}
+
+    def comp_cost(name: str) -> Cost:
+        if name in cache:
+            return cache[name]
+        comp = comps[name]
+        total = Cost()
+        for ins in comp.instrs:
+            total.add(_instr_cost(ins, comp, comp_cost))
+        cache[name] = total
+        return total
+
+    def _instr_cost(ins: Instr, comp: Computation, rec) -> Cost:
+        c = Cost()
+        op = ins.op
+        out_b = ins.shape.bytes
+        out_e = ins.shape.elems
+        opnd_b = sum(comp.table[o].shape.bytes for o in ins.operands
+                     if o in comp.table)
+        if op in ("parameter", "constant", "get-tuple-element", "tuple",
+                  "bitcast", "after-all", "reshape"):
+            return c
+        # ---- data-movement model --------------------------------------
+        # slicing ops touch only the slice, not the full (possibly stacked-
+        # over-layers) operand; counting full operands inside a while body
+        # would multiply by the trip count and overstate HBM traffic by L^2.
+        if op in ("dynamic-slice", "slice", "gather"):
+            c.bytes = 2.0 * out_b
+            return c
+        if op in ("dynamic-update-slice", "scatter"):
+            upd = (comp.table[ins.operands[1]].shape.bytes
+                   if len(ins.operands) > 1 and ins.operands[1] in comp.table
+                   else out_b)
+            c.bytes = 2.0 * upd
+            return c
+        c.bytes = out_b + opnd_b
+        if op == "while":
+            body = _attr_ref(ins.attrs, "body")
+            cond = _attr_ref(ins.attrs, "condition")
+            trip = const_table.get(cond, 1)
+            inner = Cost()
+            if body in comps:
+                inner.add(rec(body))
+            if cond in comps:
+                inner.add(rec(cond))
+            c.bytes = 0.0  # carry traffic belongs to producers + body ops
+            c.add(inner, mult=max(trip, 1))
+            c.n_while += 1
+            return c
+        if op == "conditional":
+            branches = re.findall(r"(?:true_computation|false_computation|"
+                                  r"branch_computations=\{)([^,}]+)",
+                                  ins.attrs)
+            sub = [rec(b.strip("% ")) for b in branches if b.strip("% ")
+                   in comps]
+            if sub:
+                worst = max(sub, key=lambda s: s.flops)
+                c.add(worst)
+            return c
+        if op in ("fusion", "call", "async-start"):
+            target = _attr_ref(ins.attrs, "calls") or _attr_ref(ins.attrs,
+                                                                "to_apply")
+            if target in comps:
+                inner = rec(target)
+                # fusion: inner flops count, inner BYTES don't (VMEM-resident)
+                c.flops += inner.flops
+                c.dot_flops += inner.dot_flops
+                c.transcendentals += inner.transcendentals
+                c.collective_bytes += inner.collective_bytes
+                for k, v in inner.collectives.items():
+                    slot = c.collectives.setdefault(
+                        k, {"count": 0, "bytes": 0.0})
+                    slot["count"] += v["count"]
+                    slot["bytes"] += v["bytes"]
+                # boundary bytes, slice-aware: a parameter whose only uses
+                # inside the fusion are (dynamic-)slice/gather contributes the
+                # slice size, not the full (often stacked-over-layers) operand
+                c.bytes = _fusion_boundary_bytes(ins, comp, comps[target])
+            return c
+        if op in _COLLECTIVE_OPS:
+            key = op.replace("-start", "")
+            slot = c.collectives.setdefault(key, {"count": 0, "bytes": 0.0})
+            slot["count"] += 1
+            slot["bytes"] += opnd_b
+            c.collective_bytes += opnd_b
+            # ring-model wire bytes per device (used for the ICI roofline
+            # term; the raw operand sum above is the assignment's metric)
+            n = _group_size(ins.attrs)
+            f = (n - 1) / n if n > 1 else 0.0
+            if key == "all-reduce":
+                c.wire_bytes += 2.0 * f * opnd_b
+            elif key == "all-gather":
+                c.wire_bytes += f * out_b
+            elif key in ("reduce-scatter", "all-to-all",
+                         "ragged-all-to-all"):
+                c.wire_bytes += f * opnd_b
+            else:  # collective-permute
+                c.wire_bytes += opnd_b
+            return c
+        if op == "custom-call":
+            m = re.search(r'custom_call_target="([^"]+)"', ins.attrs)
+            tgt = m.group(1) if m else "?"
+            c.custom_calls[tgt] = c.custom_calls.get(tgt, 0) + 1
+            return c
+        if op == "dot":
+            k = 1
+            m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.attrs)
+            ldims = dims_table.get((comp.name, ins.operands[0])) if \
+                ins.operands else None
+            if m and m.group(1) and ldims:
+                for d in m.group(1).split(","):
+                    if int(d) < len(ldims):
+                        k *= ldims[int(d)]
+            f = 2.0 * out_e * max(k, 1)
+            c.flops += f
+            c.dot_flops += f
+            return c
+        if op == "convolution":
+            k = 1
+            mw = re.search(r"window=\{size=([0-9x]+)", ins.attrs)
+            if mw:
+                for d in mw.group(1).split("x"):
+                    k *= int(d)
+            cin = 1
+            md = re.search(r"dim_labels=([\w?]+)_([\w?]+)->", ins.attrs)
+            if md and len(ins.operands) > 1:
+                rdims = dims_table.get((comp.name, ins.operands[1]))
+                i_pos = md.group(2).find("i")
+                if rdims and 0 <= i_pos < len(rdims):
+                    cin = rdims[i_pos]
+            f = 2.0 * out_e * k * cin
+            c.flops += f
+            c.dot_flops += f
+            return c
+        if op in ("reduce", "reduce-window"):
+            c.flops += sum(dims_and_elems(comp, o)
+                           for o in ins.operands[:1]) or out_e
+            return c
+        if op == "sort":
+            import math
+            n = max(out_e, 2)
+            c.flops += n * math.log2(n)
+            return c
+        if op in _ZERO_COST_OPS:
+            return c
+        # default: elementwise
+        c.flops += out_e
+        if op in _TRANSCENDENTAL_OPS:
+            c.transcendentals += out_e
+        return c
+
+    def dims_and_elems(comp, opname):
+        ins = comp.table.get(opname)
+        return ins.shape.elems if ins else 0
+
+    if entry is None:
+        # pick the largest computation as entry fallback
+        entry = max(comps, key=lambda k: len(comps[k].instrs))
+    total = comp_cost(entry)
+    d = total.to_dict()
+    d["entry"] = entry
+    d["n_computations"] = len(comps)
+    return d
+
+
+# ---------------------------------------------------------------------------
+# full parse (adds per-instruction dims + while-condition constants)
+
+
+def _parse_full(text: str):
+    comps: Dict[str, Computation] = {}
+    dims_table: Dict[Tuple[str, str], Tuple[int, ...]] = {}
+    comp_consts: Dict[str, int] = {}
+    cur: Optional[Computation] = None
+    entry: Optional[str] = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        if not stripped or stripped.startswith("//"):
+            continue
+        mc = _COMP_RE.match(line)
+        if mc and ("=" not in line.split("(")[0]):
+            cur = Computation(name=mc.group(2))
+            comps[cur.name] = cur
+            if mc.group(1):
+                entry = cur.name
+            # parameters appear in the signature for some printouts; the body
+            # repeats them as instructions, which we rely on.
+            continue
+        if stripped == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        mi = _INSTR_RE.match(line)
+        if not mi:
+            continue
+        is_root = bool(mi.group(1))
+        name = mi.group(2)
+        rest = mi.group(3)
+        shape, p = _parse_type(rest)
+        # capture dims of the (first) array type for dot costing
+        md = re.match(r"[a-z0-9]+\[([0-9,]*)\]", rest)
+        if md is not None:
+            dims = tuple(int(x) for x in md.group(1).split(",")) \
+                if md.group(1) else ()
+            dims_table[(cur.name, name)] = dims
+        rest2 = rest[p:].strip()
+        mo = re.match(r"([\w\-]+)\((.*)$", rest2)
+        if not mo:
+            continue
+        op = mo.group(1)
+        tail = mo.group(2)
+        depth = 1
+        arg_end = len(tail)
+        for i, ch in enumerate(tail):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    arg_end = i
+                    break
+        args = tail[:arg_end]
+        attrs = tail[arg_end + 1:]
+        operands = re.findall(r"%([\w.\-]+)", args)
+        if op == "constant":
+            mval = re.match(r"\s*(-?\d+)\s*$", args)
+            if mval and shape.elems <= 1:
+                v = int(mval.group(1))
+                comp_consts[cur.name] = max(comp_consts.get(cur.name, 0), v)
+        ins = Instr(name=name, op=op, shape=shape, operands=operands,
+                    attrs=attrs, is_root=is_root, raw_args=args)
+        cur.instrs.append(ins)
+        cur.table[name] = ins
+    # while-condition trip counts: max int constant in the condition comp
+    # (covers fused compare patterns: the limit constant stays at region level)
+    const_table = comp_consts
+    return comps, entry, dims_table, const_table
+
+
+def _fusion_boundary_bytes(ins: Instr, comp: Computation,
+                           fused: Computation) -> float:
+    """HBM traffic at a fusion boundary with slice-awareness."""
+    _SLICE = {"dynamic-slice", "slice", "gather"}
+    # map parameter index -> instruction in fused computation
+    params = {}
+    for fi in fused.instrs:
+        if fi.op == "parameter":
+            m = re.match(r"\s*(\d+)", fi.raw_args)
+            if m:
+                params[int(m.group(1))] = fi
+    root = next((fi for fi in fused.instrs if fi.is_root), None)
+    total = 0.0
+    for i, opname in enumerate(ins.operands):
+        opnd = comp.table.get(opname)
+        if opnd is None:
+            continue
+        pin = params.get(i)
+        if pin is None:
+            total += opnd.shape.bytes
+            continue
+        users = [fi for fi in fused.instrs if pin.name in fi.operands]
+        if users and all(u.op in _SLICE for u in users):
+            total += sum(u.shape.bytes for u in users)
+        elif (root is not None and root.op == "dynamic-update-slice"
+              and users == [root] and root.operands
+              and root.operands[0] == pin.name):
+            total += 0.0  # in-place DUS target: aliased, not read
+        else:
+            total += opnd.shape.bytes
+    if root is not None and root.op in ("dynamic-update-slice", "scatter") \
+            and len(root.operands) > 1:
+        upd = fused.table.get(root.operands[1])
+        total += 2.0 * (upd.shape.bytes if upd else ins.shape.bytes)
+    else:
+        total += ins.shape.bytes
+    return total
+
+
+def _group_size(attrs: str) -> int:
+    """Collective group size from replica_groups=[G,N]<=[...] or {{...}}."""
+    m = re.search(r"replica_groups=\[\d+,(\d+)\]", attrs)
+    if m:
+        return int(m.group(1))
+    m = re.search(r"replica_groups=\{\{([^}]*)\}", attrs)
+    if m:
+        return max(1, m.group(1).count(",") + 1)
+    return 1

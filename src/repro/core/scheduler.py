@@ -1,0 +1,137 @@
+"""Runtime scheduler (paper §II-C): accelerator worker pool + per-worker
+command queues, tile-level parallelism, and reduction affinity.
+
+Two modes:
+  * ``simulate(...)``   — discrete-event simulation of the pool given tile
+    durations (the multi-accelerator case study, Fig 12/14): tiles whose
+    partial results must be reduced in place are pinned to one queue
+    (affinity key), reproducing the under-utilization SMAUG observed on
+    VGG16 layers 8/9.
+  * ``ThreadPool``      — a real host-side worker pool used by the data
+    pipeline for tile materialization / gathering (the multithreading case
+    study, Fig 16): tasks run to completion, workers are woken only when
+    work arrives (the gem5 quiesce workaround maps to a Condition variable).
+"""
+from __future__ import annotations
+
+import heapq
+import queue
+import threading
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence
+
+from repro.core.timeline import Timeline
+
+
+@dataclass(frozen=True)
+class TileTask:
+    name: str
+    duration: float                 # seconds (from the simulator/cost model)
+    affinity: Optional[str] = None  # reduction-affinity key: same key ->
+                                    # same worker queue (in-place partials)
+    transfer: float = 0.0           # data-in time occupying the memory port
+    deps: tuple = ()                # names that must complete first
+
+
+def simulate(tasks: Sequence[TileTask], n_workers: int,
+             shared_bw_penalty: float = 0.0) -> Timeline:
+    """Discrete-event simulation of the worker pool.
+
+    shared_bw_penalty: fractional slowdown of ``transfer`` phases per extra
+    concurrently-transferring worker (memory-bandwidth contention model used
+    in the Fig 13 analogue).
+    """
+    tl = Timeline()
+    done: Dict[str, float] = {}
+    pending = list(tasks)
+    # per-worker available time; affinity map
+    avail = [0.0] * n_workers
+    affinity_worker: Dict[str, int] = {}
+
+    def eligible(t: TileTask) -> bool:
+        return all(d in done for d in t.deps)
+
+    remaining = len(pending)
+    while remaining:
+        progressed = False
+        ready = [t for t in pending if eligible(t)]
+        for t in sorted(ready, key=lambda t: -t.duration):  # LPT heuristic
+            if t.affinity is not None and t.affinity in affinity_worker:
+                w = affinity_worker[t.affinity]
+            else:
+                w = min(range(n_workers), key=lambda i: avail[i])
+                if t.affinity is not None:
+                    affinity_worker[t.affinity] = w
+            start = max(avail[w], max((done[d] for d in t.deps), default=0.0))
+            n_conc = sum(1 for a in avail if a > start)  # crude concurrency
+            xfer = t.transfer * (1.0 + shared_bw_penalty * max(n_conc - 1, 0))
+            if xfer:
+                tl.add(f"acc{w}", f"{t.name}:xfer", start, xfer, "transfer")
+            tl.add(f"acc{w}", t.name, start + xfer, t.duration, "compute")
+            avail[w] = start + xfer + t.duration
+            done[t.name] = avail[w]
+            pending.remove(t)
+            remaining -= 1
+            progressed = True
+        if not progressed and pending:
+            raise ValueError("dependency cycle in tile tasks")
+    return tl
+
+
+# ---------------------------------------------------------------------------
+# real host-side worker pool (data preparation / finalization)
+
+
+class ThreadPool:
+    """Run-to-completion task pool with quiesced (condition-waiting) workers.
+
+    The paper implements this inside gem5 because syscall-emulation has no
+    kernel scheduler; here it is the host-side data-preparation pool.  NumPy
+    memcpys release the GIL, so tiling/untiling tasks scale with workers.
+    """
+
+    def __init__(self, n_workers: int):
+        self.n_workers = n_workers
+        self._q: "queue.Queue" = queue.Queue()
+        self._threads: List[threading.Thread] = []
+        self._stop = threading.Event()
+        for i in range(n_workers):
+            th = threading.Thread(target=self._worker, name=f"pool{i}",
+                                  daemon=True)
+            th.start()
+            self._threads.append(th)
+
+    def _worker(self):
+        while not self._stop.is_set():
+            try:
+                fn, args, ev, out = self._q.get(timeout=0.1)
+            except queue.Empty:
+                continue  # quiesced wait
+            try:
+                out.append(fn(*args))
+            except Exception as e:  # noqa: BLE001
+                out.append(e)
+            ev.set()
+            self._q.task_done()
+
+    def map(self, fn: Callable, items: Sequence) -> List:
+        """Dispatch fn over items; blocks until all complete (join)."""
+        slots = []
+        for it in items:
+            ev = threading.Event()
+            out: List = []
+            self._q.put((fn, (it,), ev, out))
+            slots.append((ev, out))
+        results = []
+        for ev, out in slots:
+            ev.wait()
+            r = out[0]
+            if isinstance(r, Exception):
+                raise r
+            results.append(r)
+        return results
+
+    def shutdown(self):
+        self._stop.set()
+        for th in self._threads:
+            th.join(timeout=1.0)

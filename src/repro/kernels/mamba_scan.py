@@ -1,0 +1,74 @@
+"""Selective-scan (Mamba1) kernel (Pallas, TPU target).
+
+The lax.scan baseline round-trips the (d_inner, N) state through HBM every
+timestep — the memory-bound term the falcon-mamba §Perf iteration attacks.
+This kernel keeps the state in VMEM across a whole sequence chunk:
+
+  grid = (B, d_inner/bd, S/chunk)    chunk innermost, sequential
+  state scratch (bd, N) persists across chunk steps (VMEM-resident)
+  inside a chunk: fori_loop over timesteps (VREG/VMEM only)
+
+B/C are shared across channels (per Mamba1), A is (d, N) channel-specific.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scan_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, d_ref, o_ref, h_ref, *,
+                 chunk: int):
+    s = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    a = a_ref[...]                                    # (bd, N) fp32
+    dvec = d_ref[...]                                 # (1, bd)
+
+    def step(t, h):
+        x_t = x_ref[0, t].astype(jnp.float32)         # (bd,)
+        dt_t = dt_ref[0, t].astype(jnp.float32)       # (bd,)
+        b_t = b_ref[0, t].astype(jnp.float32)         # (N,)
+        c_t = c_ref[0, t].astype(jnp.float32)         # (N,)
+        da = jnp.exp(dt_t[:, None] * a)               # (bd, N)
+        h = da * h + (dt_t * x_t)[:, None] * b_t[None, :]
+        y = jnp.sum(h * c_t[None, :], axis=-1) + dvec[0] * x_t
+        o_ref[0, t] = y.astype(o_ref.dtype)
+        return h
+
+    h_ref[...] = jax.lax.fori_loop(0, chunk, step, h_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("bd", "chunk", "interpret"))
+def mamba_scan(x, dt, B, C, A, D, *, bd: int = 0, chunk: int = 0,
+               interpret: bool = False):
+    """x, dt: (b, S, d); B, C: (b, S, N); A: (d, N) fp32; D: (d,) fp32.
+    Returns y: (b, S, d)."""
+    bsz, S, d = x.shape
+    N = B.shape[-1]
+    bd = min(bd or min(d, 512), d)
+    chunk = min(chunk or min(S, 128), S)
+    assert d % bd == 0 and S % chunk == 0, (d, bd, S, chunk)
+    grid = (bsz, d // bd, S // chunk)
+    return pl.pallas_call(
+        functools.partial(_scan_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, bd), lambda b, i, s: (b, s, i)),  # x
+            pl.BlockSpec((1, chunk, bd), lambda b, i, s: (b, s, i)),  # dt
+            pl.BlockSpec((1, chunk, N), lambda b, i, s: (b, s, 0)),   # B
+            pl.BlockSpec((1, chunk, N), lambda b, i, s: (b, s, 0)),   # C
+            pl.BlockSpec((bd, N), lambda b, i, s: (i, 0)),            # A
+            pl.BlockSpec((1, bd), lambda b, i, s: (0, i)),            # D
+        ],
+        out_specs=pl.BlockSpec((1, chunk, bd), lambda b, i, s: (b, s, i)),
+        out_shape=jax.ShapeDtypeStruct((bsz, S, d), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bd, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, B, C, A, D.reshape(1, d))

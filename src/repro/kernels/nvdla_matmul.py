@@ -1,0 +1,71 @@
+"""NVDLA-dataflow-adapted tiled matmul (Pallas, TPU target).
+
+The NVDLA convolution engine (paper Fig 4) reduces partial products along the
+CHANNEL dimension in 32-wide MACC blocks, with weights register-resident (L0
+weight-stationary) and outputs accumulated in place in SRAM (L1 output-
+stationary).  TPU adaptation (DESIGN.md §2): the channel dimension becomes
+the contraction (K) dimension of a blocked matmul on the 128x128 MXU:
+
+  grid = (M/bm, N/bn, K/bk)      k innermost — NVDLA's channel-block loop
+  A/B tiles staged HBM->VMEM via BlockSpec
+  fp32 accumulator in VMEM scratch — "outputs accumulated in-place in SRAM"
+  out tile written once on the last k step
+
+Block shapes come from the tiling optimizer (repro.core.tiling.
+choose_matmul_tiling), which plays the role of SMAUG's per-dataflow tiling
+optimizer for this kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # MXU contraction over this channel block (fp32 accumulate)
+    acc_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def matmul(a, b, *, bm: int = 0, bn: int = 0, bk: int = 0,
+           interpret: bool = False):
+    """a: (M, K) @ b: (K, N) -> (M, N).  Block shapes default to the tiling
+    optimizer's choice."""
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2
+    if not (bm and bn and bk):
+        from repro.core.tiling import choose_matmul_tiling
+        t = choose_matmul_tiling(M, N, K, dtype_bytes=a.dtype.itemsize)
+        bm, bn, bk = t.bm, t.bn, t.bk
+    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (M, N, K, bm, bn, bk)
+    n_k = K // bk
+    grid = (M // bm, N // bn, n_k)
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for the Pallas kernels (allclose targets in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(a, b):
+    """a: (M, K), b: (K, N) -> (M, N) with fp32 accumulation."""
+    return jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32)) \
+        .astype(a.dtype)
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0):
+    """q,k,v: (B, H, S, D) -> (B, H, S, D).  Dense softmax reference."""
+    B, H, S, D = q.shape
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (D ** -0.5)
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def mamba_scan_ref(x, dt, B, C, A, D):
+    """Selective scan, sequential reference.
+
+    x, dt: (b, S, d); B, C: (b, S, N); A: (d, N); D: (d,)
+    Returns y: (b, S, d).
+    """
+    bsz, S, d = x.shape
+    N = B.shape[-1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+
+    def step(h, inp):
+        x_t, dt_t, B_t, C_t = inp
+        da = jnp.exp(dt_t[..., None] * A[None])              # (b, d, N)
+        h = da * h + dt_t[..., None] * B_t[:, None, :] * x_t[..., None]
+        y = jnp.einsum("bdn,bn->bd", h, C_t)
+        return h, y
+
+    h0 = jnp.zeros((bsz, d, N), jnp.float32)
+    _, ys = jax.lax.scan(step, h0,
+                         (xf.transpose(1, 0, 2), dtf.transpose(1, 0, 2),
+                          B.astype(jnp.float32).transpose(1, 0, 2),
+                          C.astype(jnp.float32).transpose(1, 0, 2)))
+    y = ys.transpose(1, 0, 2) + D[None, None] * xf
+    return y.astype(x.dtype)

@@ -1,0 +1,40 @@
+"""Production mesh builders.
+
+Functions (not module-level constants) so importing this module never touches
+jax device state.  The dry-run launcher sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` BEFORE importing jax
+(see launch/dryrun.py) so these meshes can be built on a CPU-only host.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 chips per pod (v5e); 2 pods for the multi-pod dry-run."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()[:n]
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices, have {len(devices)}; run under "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=512")
+    import numpy as np
+    dev_array = np.asarray(devices).reshape(shape)
+    return jax.sharding.Mesh(dev_array, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over whatever local devices exist (tests / examples)."""
+    import numpy as np
+    n = data * model
+    devices = jax.devices()[:n]
+    if len(devices) < n:
+        raise RuntimeError(f"need {n} devices, have {len(devices)}")
+    return jax.sharding.Mesh(np.asarray(devices).reshape(data, model),
+                             ("data", "model"))

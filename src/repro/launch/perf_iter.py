@@ -1,0 +1,63 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+"""Hillclimb driver (§Perf): lower one cell with a PerfFlags combo, analyze,
+and append the roofline terms to experiments/perf_iters.json.
+
+  PYTHONPATH=src python -m repro.launch.perf_iter --arch gemma3_1b \
+      --shape train_4k --perf attn_remat_chunk,windowed_attention
+"""
+import argparse
+import json
+import time
+from pathlib import Path
+
+from repro.configs import get_config
+from repro.core.config import SHAPE_BY_NAME
+from repro.core.hlo import analyze_hlo
+from repro.core.simulator import roofline
+from repro.launch.dryrun import lower_cell
+from repro.launch.mesh import make_production_mesh
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--perf", default="")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--out", default="experiments/perf_iters.json")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    shape = SHAPE_BY_NAME[args.shape]
+    mesh = make_production_mesh()
+    t0 = time.time()
+    lowered, rules = lower_cell(cfg, shape, mesh, perf=args.perf,
+                                n_microbatches=args.microbatches)
+    compiled = lowered.compile()
+    hlo = analyze_hlo(compiled.as_text())
+    rl = roofline(hlo, cfg, shape, 256)
+    mem = compiled.memory_analysis()
+    rec = {"arch": args.arch, "shape": args.shape, "perf": args.perf,
+           "microbatches": args.microbatches,
+           "wall_s": round(time.time() - t0, 1),
+           "temp_bytes": mem.temp_size_in_bytes,
+           "hlo": {k: hlo[k] for k in ("flops", "dot_flops", "bytes",
+                                       "collective_bytes", "wire_bytes")},
+           "collectives": hlo["collectives"],
+           "roofline": rl.to_dict()}
+    out = Path(args.out)
+    data = json.loads(out.read_text()) if out.exists() else {}
+    key = f"{args.arch}|{args.shape}|{args.perf}|mb{args.microbatches}"
+    data[key] = rec
+    out.write_text(json.dumps(data, indent=1))
+    r = rl.to_dict()
+    print(f"{key}\n  compute={r['compute_s']:.3f}s memory={r['memory_s']:.3f}s "
+          f"collective={r['collective_s']:.3f}s bound={r['bound']} "
+          f"useful={r['useful_ratio']*100:.0f}% "
+          f"rl_frac={r['roofline_fraction']*100:.2f}% "
+          f"temp={mem.temp_size_in_bytes/1e9:.1f}GB")
+
+
+if __name__ == "__main__":
+    main()

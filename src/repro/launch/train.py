@@ -1,0 +1,109 @@
+"""Production training launcher: builds the mesh, shards state per the rule
+engine, and runs the train loop with fault-tolerant checkpointing.
+
+On real hardware:
+  python -m repro.launch.train --arch tinyllama_1_1b --shape train_4k
+On this container it runs reduced configs on the single local device
+(``--smoke``); the production mesh path is exercised (lower+compile) by
+``repro.launch.dryrun``.
+
+Fault-tolerance posture (DESIGN.md §4): resume from the newest committed
+checkpoint (``--resume``), async saves off the training thread, elastic
+restore onto whatever mesh this launch built (checkpoints are mesh-
+agnostic), preemption-safe atomic commits.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt import CheckpointManager
+from repro.configs import get_config, get_smoke_config
+from repro.core.config import SHAPE_BY_NAME
+from repro.data import DataPipeline
+from repro.dist import context as dist_ctx
+from repro.dist.sharding import rules_for, set_active_rules
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models import transformer as T
+from repro.optim import adamw_init
+from repro.train import TrainConfig, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama_1_1b")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config on local devices")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    args = ap.parse_args()
+
+    shape = SHAPE_BY_NAME[args.shape]
+    if args.smoke:
+        cfg = get_smoke_config(args.arch)
+        mesh = make_host_mesh(1, 1)
+        batch, seq = 4, 64
+    else:
+        cfg = get_config(args.arch)
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+        batch, seq = shape.global_batch, shape.seq_len
+
+    rules = rules_for(cfg, shape, mesh)
+    set_active_rules(rules)
+    dist_ctx.set_mesh(mesh)
+
+    params, axes = T.init_params(cfg, jax.random.PRNGKey(0))
+    param_sh = rules.tree_shardings(
+        axes, jax.tree_util.tree_map(lambda x: x, params))
+    params = jax.device_put(params, param_sh)
+    opt = jax.device_put(adamw_init(params), {
+        "m": param_sh, "v": param_sh,
+        "count": jax.sharding.NamedSharding(
+            mesh, jax.sharding.PartitionSpec())})
+
+    tc = TrainConfig(total_steps=args.steps,
+                     n_microbatches=args.microbatches)
+    step_fn = jax.jit(make_train_step(cfg, tc), donate_argnums=(0, 1))
+    mgr = CheckpointManager(args.ckpt_dir, keep=3)
+    start = 0
+    if args.resume and mgr.latest_step() is not None:
+        out = mgr.restore(template={"params": params, "opt": opt},
+                          shardings={"params": param_sh,
+                                     "opt": {"m": param_sh, "v": param_sh,
+                                             "count": None}})
+        params, opt = out["tree"]["params"], out["tree"]["opt"]
+        start = out["step"] + 1
+        print(f"[restore] resumed at step {start}")
+
+    pipe = DataPipeline(cfg, batch, seq, n_workers=2, prefetch=2)
+    try:
+        t0 = time.time()
+        for i in range(start, args.steps):
+            b = {k: jnp.asarray(v) for k, v in next(pipe).items()}
+            params, opt, metrics = step_fn(params, opt, b,
+                                           jnp.asarray(i, jnp.int32))
+            if i % 10 == 0:
+                print(f"step {i} loss={float(metrics['loss']):.3f} "
+                      f"({(i-start+1)*batch*seq/(time.time()-t0):.0f} tok/s)",
+                      flush=True)
+            if i and i % args.ckpt_every == 0:
+                mgr.save_async(i, {"params": params, "opt": opt})
+        mgr.save_async(args.steps - 1, {"params": params, "opt": opt})
+        mgr.wait()
+    finally:
+        pipe.stop()
+        set_active_rules(None)
+        dist_ctx.set_mesh(None)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,353 @@
+"""Attention: GQA/MQA, MLA (DeepSeek), sliding-window, chunked online-softmax.
+
+The chunked (flash-style) path is the default jnp implementation so that 32k+
+prefill lowers with O(seq * chunk) live memory; the Pallas kernel in
+repro.kernels.flash_attention implements the same dataflow for TPU.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import MLAConfig, ModelConfig
+from repro.models.layers import Leaf, dense_init, norm_init, rmsnorm
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# parameter init
+
+
+def attn_init(rng, cfg: ModelConfig, dtype=jnp.bfloat16):
+    d, H, Hkv = cfg.d_model, cfg.n_heads, cfg.n_kv_heads
+    hd = cfg.resolved_head_dim
+    if cfg.mla is not None:
+        m = cfg.mla
+        r = jax.random.split(rng, 4)
+        return {
+            "q": dense_init(r[0], d, H * (m.qk_nope_dim + m.qk_rope_dim),
+                            ("d_model", "heads_x_dim")),
+            "kv_a": dense_init(r[1], d, m.kv_lora_rank + m.qk_rope_dim,
+                               ("d_model", None)),
+            "kv_norm": norm_init(m.kv_lora_rank),
+            "kv_b": dense_init(r[2], m.kv_lora_rank,
+                               H * (m.qk_nope_dim + m.v_head_dim),
+                               (None, "heads_x_dim")),
+            "o": dense_init(r[3], H * m.v_head_dim, d,
+                            ("heads_x_dim", "d_model")),
+        }
+    r = jax.random.split(rng, 4)
+    return {
+        "q": dense_init(r[0], d, H * hd, ("d_model", "heads_x_dim")),
+        "k": dense_init(r[1], d, Hkv * hd, ("d_model", "kv_heads_x_dim")),
+        "v": dense_init(r[2], d, Hkv * hd, ("d_model", "kv_heads_x_dim")),
+        "o": dense_init(r[3], H * hd, d, ("heads_x_dim", "d_model")),
+    }
+
+
+# ---------------------------------------------------------------------------
+# chunked online-softmax attention (prefill / train)
+
+
+def chunked_attention(q, k, v, *, causal=True, window=0, q_offset=0,
+                      kv_valid=None, chunk=512):
+    """q: (B, H, Sq, D); k, v: (B, Hkv, Skv, D).  Returns (B, H, Sq, D).
+
+    Scans over KV chunks with an online-softmax carry so live memory is
+    O(Sq * chunk) rather than O(Sq * Skv).
+    """
+    B, H, Sq, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    G = H // Hkv
+    scale = D ** -0.5
+    chunk = min(chunk, Skv)
+    if Skv % chunk:  # pad KV to a chunk multiple; padded keys are masked out
+        pad = chunk - Skv % chunk
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        if kv_valid is None:
+            kv_valid = Skv
+        Skv = Skv + pad
+    n_chunks = Skv // chunk
+
+    # NOTE: q stays (B, H, Sq, D) so TP head-sharding is preserved even when
+    # Hkv < tp; KV chunks are broadcast to full heads INSIDE the body (free —
+    # fused into the einsum).  A (B, Hkv, G, ...) reshape here would force
+    # XLA to replicate q across the model axis (observed: +2.1 GB/device of
+    # fp32 traffic per layer on tinyllama train_4k).
+    q_pos = q_offset + jnp.arange(Sq)
+    kc = k.reshape(B, Hkv, n_chunks, chunk, D).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(B, Hkv, n_chunks, chunk, D).transpose(2, 0, 1, 3, 4)
+    idx = jnp.arange(n_chunks)
+    qf = q.astype(jnp.float32)
+
+    def expand(t):  # (B, Hkv, c, D) -> (B, H, c, D), fusable broadcast
+        if G == 1:
+            return t
+        return jnp.broadcast_to(
+            t[:, :, None], (B, Hkv, G, chunk, D)).reshape(B, H, chunk, D)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        i, k_i, v_i = xs
+        k_pos = i * chunk + jnp.arange(chunk)
+        s = jnp.einsum("bhqd,bhcd->bhqc", qf,
+                       expand(k_i).astype(jnp.float32)) * scale
+        mask = jnp.ones((Sq, chunk), dtype=bool)
+        if causal:
+            mask &= q_pos[:, None] >= k_pos[None, :]
+        if window is not None and not (isinstance(window, int) and window == 0):
+            # trace-safe: window may be a scalar array; 0 means unlimited
+            w_eff = jnp.where(window > 0, window, Sq + Skv + 1)
+            mask &= (q_pos[:, None] - k_pos[None, :]) < w_eff
+        if kv_valid is not None:
+            mask &= (k_pos < kv_valid)[None, :]
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhqc,bhcd->bhqd", p, expand(v_i).astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    from repro.dist import context as dist_ctx
+    if dist_ctx.perf_flags().attn_remat_chunk:
+        # flash-style backward: recompute the (Sq, chunk) score tile in the
+        # bwd pass instead of stacking it per chunk (§Perf: removes the
+        # n_chunks x B x H x Sq x chunk fp32 residual the autodiff of the
+        # plain scan materializes)
+        body = jax.checkpoint(body)
+
+    m0 = jnp.full((B, H, Sq), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), dtype=jnp.float32)
+    a0 = jnp.zeros((B, H, Sq, D), dtype=jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (idx, kc, vc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(q.dtype)
+
+
+def windowed_attention(q, k, v, *, window: int, chunk: int = 512,
+                       q_offset=0):
+    """Sliding-window attention with STATIC window: each query chunk
+    attends only to its own and the previous KV chunk (requires
+    window <= chunk), so compute and traffic scale with O(S * window)
+    instead of O(S^2) — the gemma3 local-layer path (§Perf).
+
+    q: (B, H, Sq, D); k, v: (B, Hkv, Skv, D), Sq == Skv.
+    """
+    B, H, Sq, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    G = H // Hkv
+    assert window <= chunk, (window, chunk)
+    chunk = min(chunk, Sq)
+    assert Sq % chunk == 0
+    nq = Sq // chunk
+    scale = D ** -0.5
+    # pad one chunk of zeros on the left so every q-chunk sees 2 chunks
+    kp = jnp.pad(k, ((0, 0), (0, 0), (chunk, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (chunk, 0), (0, 0)))
+    qc = q.reshape(B, H, nq, chunk, D).transpose(2, 0, 1, 3, 4)
+
+    def expand(t, c):
+        if G == 1:
+            return t
+        return jnp.broadcast_to(t[:, :, None], (B, Hkv, G, c, D)) \
+            .reshape(B, H, c, D)
+
+    def body(_, xs):
+        j, q_j = xs
+        k_j = jax.lax.dynamic_slice_in_dim(kp, j * chunk, 2 * chunk, 2)
+        v_j = jax.lax.dynamic_slice_in_dim(vp, j * chunk, 2 * chunk, 2)
+        q_pos = q_offset + j * chunk + jnp.arange(chunk)
+        k_pos = q_offset + (j - 1) * chunk + jnp.arange(2 * chunk)
+        s = jnp.einsum("bhqd,bhcd->bhqc", q_j.astype(jnp.float32),
+                       expand(k_j, 2 * chunk).astype(jnp.float32)) * scale
+        mask = (q_pos[:, None] >= k_pos[None, :]) \
+            & ((q_pos[:, None] - k_pos[None, :]) < window) \
+            & (k_pos >= 0)[None, :]
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhqc,bhcd->bhqd", p,
+                       expand(v_j, 2 * chunk).astype(jnp.float32))
+        return (), o.astype(q.dtype)
+
+    _, outs = jax.lax.scan(body, (), (jnp.arange(nq), qc))
+    return outs.transpose(1, 2, 0, 3, 4).reshape(B, H, Sq, D)
+
+
+def decode_attention(q, k_cache, v_cache, *, pos, window=0, k_pos=None):
+    """Single-token decode.  q: (B, H, 1, D); caches: (B, Hkv, S, D).
+
+    ``pos`` is the current (scalar) position; keys at index > pos are masked.
+    ``k_pos``: optional global positions of the cache slice (windowed path).
+    """
+    B, H, _, D = q.shape
+    _, Hkv, S, _ = k_cache.shape
+    G = H // Hkv
+    scale = D ** -0.5
+
+    def expand(t):  # (B, Hkv, S, D) -> (B, H, S, D) broadcast (fused)
+        if G == 1:
+            return t
+        return jnp.broadcast_to(
+            t[:, :, None], (B, Hkv, G, S, D)).reshape(B, H, S, D)
+
+    s = jnp.einsum("bhd,bhsd->bhs", q[:, :, 0].astype(jnp.float32),
+                   expand(k_cache).astype(jnp.float32)) * scale
+    if k_pos is None:
+        k_pos = jnp.arange(S)
+    mask = k_pos <= pos
+    if window is not None and not (isinstance(window, int) and window == 0):
+        w_eff = jnp.where(window > 0, window, S + 1)
+        mask &= (pos - k_pos) < w_eff
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhs,bhsd->bhd", w, expand(v_cache).astype(jnp.float32))
+    return out[:, :, None].astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# standard (GQA) attention layer forward
+
+
+def gqa_forward(p, x, cos, sin, *, cfg: ModelConfig, causal=True, window=0,
+                q_offset=0, xa=None, static_window=None):
+    """Full-sequence attention (train/prefill).  Returns (out, (k, v)).
+
+    ``xa``: encoder output for cross attention (k/v from xa, no causal mask).
+    ``static_window``: compile-time window -> O(S*window) windowed path.
+    """
+    from repro.dist.tp import tp_project
+    B, S, d = x.shape
+    H, Hkv = cfg.n_heads, cfg.n_kv_heads
+    hd = cfg.resolved_head_dim
+    kv_src = xa if xa is not None else x
+    Skv = kv_src.shape[1]
+    q = (x @ p["q"]).reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    k = (kv_src @ p["k"]).reshape(B, Skv, Hkv, hd).transpose(0, 2, 1, 3)
+    v = (kv_src @ p["v"]).reshape(B, Skv, Hkv, hd).transpose(0, 2, 1, 3)
+    if cos is not None and xa is None:
+        q = _rope_heads(q, cos, sin)
+        k = _rope_heads(k, cos, sin)
+    if static_window and xa is None:
+        out = windowed_attention(q, k, v, window=static_window,
+                                 q_offset=q_offset)
+    else:
+        out = chunked_attention(q, k, v, causal=causal and xa is None,
+                                window=window, q_offset=q_offset)
+    out = out.transpose(0, 2, 1, 3).reshape(B, S, H * hd)
+    return tp_project(out, p["o"]), (k, v)
+
+
+def gqa_decode(p, x, cache_k, cache_v, cos, sin, *, cfg: ModelConfig, pos,
+               window=0, xa_kv=None, static_window=None):
+    """One-token decode.  x: (B, 1, d).  cache_[kv]: (B, Hkv, S, hd).
+
+    ``static_window``: compile-time window — the attention reads only a
+    window-sized SLICE of the cache (O(window) instead of O(S) per token;
+    the gemma3 local-layer decode path, §Perf)."""
+    B, _, d = x.shape
+    H, Hkv = cfg.n_heads, cfg.n_kv_heads
+    hd = cfg.resolved_head_dim
+    q = (x @ p["q"]).reshape(B, 1, H, hd).transpose(0, 2, 1, 3)
+    if xa_kv is not None:
+        k, v = xa_kv  # cross-attention: precomputed encoder KV
+        out = decode_attention(q, k, v, pos=k.shape[2] - 1)
+        out = out.transpose(0, 2, 1, 3).reshape(B, 1, H * hd)
+        return out @ p["o"], cache_k, cache_v
+    k_new = (x @ p["k"]).reshape(B, 1, Hkv, hd).transpose(0, 2, 1, 3)
+    v_new = (x @ p["v"]).reshape(B, 1, Hkv, hd).transpose(0, 2, 1, 3)
+    if cos is not None:
+        q = _rope_heads(q, cos, sin)
+        k_new = _rope_heads(k_new, cos, sin)
+    cache_k = jax.lax.dynamic_update_slice(cache_k, k_new.astype(cache_k.dtype),
+                                           (0, 0, pos, 0))
+    cache_v = jax.lax.dynamic_update_slice(cache_v, v_new.astype(cache_v.dtype),
+                                           (0, 0, pos, 0))
+    if static_window:
+        S = cache_k.shape[2]
+        w = min(static_window, S)
+        start = jnp.clip(pos - w + 1, 0, S - w)
+        k_win = jax.lax.dynamic_slice_in_dim(cache_k, start, w, 2)
+        v_win = jax.lax.dynamic_slice_in_dim(cache_v, start, w, 2)
+        out = decode_attention(q, k_win, v_win, pos=pos,
+                               k_pos=start + jnp.arange(w))
+    else:
+        out = decode_attention(q, cache_k, cache_v, pos=pos, window=window)
+    out = out.transpose(0, 2, 1, 3).reshape(B, 1, H * hd)
+    return out @ p["o"], cache_k, cache_v
+
+
+def _rope_heads(x, cos, sin):
+    """x: (B, H, S, D); cos/sin: (S, D/2) or (1, D/2) for decode."""
+    from repro.models.layers import apply_rope
+    return apply_rope(x, cos[None, None], sin[None, None])
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek V2) — compressed KV cache
+
+
+def mla_forward(p, x, cos, sin, *, cfg: ModelConfig, q_offset=0):
+    """Train/prefill MLA, naive (expanded) form.  Returns (out, (c_kv, k_rope))."""
+    m = cfg.mla
+    B, S, d = x.shape
+    H = cfg.n_heads
+    dn, dr, dv = m.qk_nope_dim, m.qk_rope_dim, m.v_head_dim
+    q = (x @ p["q"]).reshape(B, S, H, dn + dr).transpose(0, 2, 1, 3)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    kv = x @ p["kv_a"]
+    c_kv = rmsnorm(kv[..., :m.kv_lora_rank], p["kv_norm"])
+    k_rope = kv[..., m.kv_lora_rank:]                      # (B, S, dr) shared
+    q_rope = _rope_heads(q_rope, cos, sin)
+    k_rope = _rope_heads(k_rope[:, None], cos, sin)[:, 0]  # rope on shared key
+    # expand compressed kv
+    kvb = (c_kv @ p["kv_b"]).reshape(B, S, H, dn + dv).transpose(0, 2, 1, 3)
+    k_nope, v = kvb[..., :dn], kvb[..., dn:]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, None], (B, H, S, dr))], axis=-1)
+    qf = jnp.concatenate([q_nope, q_rope], axis=-1)
+    # pad v head dim to qk dim for the shared kernel, then slice back
+    out = chunked_attention(qf, k, jnp.pad(v, ((0, 0), (0, 0), (0, 0),
+                                               (0, dn + dr - dv))),
+                            causal=True, q_offset=q_offset)[..., :dv]
+    out = out.transpose(0, 2, 1, 3).reshape(B, S, H * dv)
+    return out @ p["o"], (c_kv, k_rope)
+
+
+def mla_decode(p, x, cache_ckv, cache_krope, cos, sin, *, cfg: ModelConfig, pos):
+    """Absorbed-matmul MLA decode: attention runs in the compressed space.
+    cache_ckv: (B, S, lora); cache_krope: (B, S, dr)."""
+    m = cfg.mla
+    B = x.shape[0]
+    H = cfg.n_heads
+    dn, dr, dv, R = m.qk_nope_dim, m.qk_rope_dim, m.v_head_dim, m.kv_lora_rank
+    scale = (dn + dr) ** -0.5
+    q = (x @ p["q"]).reshape(B, 1, H, dn + dr).transpose(0, 2, 1, 3)
+    q_nope, q_rope = q[..., :dn], _rope_heads(q[..., dn:], cos, sin)
+    kv = x @ p["kv_a"]
+    c_new = rmsnorm(kv[..., :R], p["kv_norm"])             # (B, 1, R)
+    kr_new = _rope_heads(kv[:, None, :, R:], cos, sin)[:, 0]
+    cache_ckv = jax.lax.dynamic_update_slice(
+        cache_ckv, c_new.astype(cache_ckv.dtype), (0, pos, 0))
+    cache_krope = jax.lax.dynamic_update_slice(
+        cache_krope, kr_new.astype(cache_krope.dtype), (0, pos, 0))
+    wkb = p["kv_b"].reshape(R, H, dn + dv)
+    w_k, w_v = wkb[..., :dn], wkb[..., dn:]
+    # absorb: q into compressed space
+    q_c = jnp.einsum("bhd,rhd->bhr", q_nope[:, :, 0].astype(jnp.float32),
+                     w_k.astype(jnp.float32))
+    s = (jnp.einsum("bhr,bsr->bhs", q_c, cache_ckv.astype(jnp.float32))
+         + jnp.einsum("bhd,bsd->bhs", q_rope[:, :, 0].astype(jnp.float32),
+                      cache_krope.astype(jnp.float32))) * scale
+    mask = jnp.arange(cache_ckv.shape[1]) <= pos
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    ctx_c = jnp.einsum("bhs,bsr->bhr", w, cache_ckv.astype(jnp.float32))
+    out = jnp.einsum("bhr,rhv->bhv", ctx_c, w_v.astype(jnp.float32))
+    out = out.reshape(B, 1, H * dv).astype(x.dtype)
+    return out @ p["o"], cache_ckv, cache_krope

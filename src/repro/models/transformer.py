@@ -1,0 +1,628 @@
+"""Model builder: decoder-only / enc-dec / SSM / hybrid transformers.
+
+All architectures share the same entry points:
+  init_params(cfg, rng)                  -> (params, axes)
+  train_forward(cfg, params, batch)      -> (logits, aux)
+  loss_fn(cfg, params, batch)            -> (loss, metrics)
+  init_cache(cfg, batch, max_seq)        -> (cache, cache_axes)
+  prefill_forward(cfg, params, batch)    -> (logits_last, cache)
+  decode_forward(cfg, params, cache, tokens, pos) -> (logits, cache)
+
+Layers are STACKED along a leading axis and executed with lax.scan (+remat),
+which keeps HLO size O(1) in depth and forms the loop tree the SMAUG-style
+sampled simulator unsamples through (DESIGN.md §7).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import ModelConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (Leaf, apply_norm, embed_init, mlp_apply,
+                                 mlp_init, norm_init, rope_tables,
+                                 sinusoid_positions, split_leaves)
+
+Pytree = Any
+
+
+# ---------------------------------------------------------------------------
+# init
+
+
+def _block_init(rng, cfg: ModelConfig, kind: str):
+    """kind: attn_mlp | attn_moe | xattn (encdec decoder) | mamba1 | mamba2"""
+    r = jax.random.split(rng, 6)
+    if kind == "mamba1":
+        return {"norm1": norm_init(cfg.d_model),
+                "ssm": ssm_mod.mamba1_init(r[0], cfg)}
+    if kind == "mamba2":
+        return {"norm1": norm_init(cfg.d_model),
+                "ssm": ssm_mod.mamba2_init(r[0], cfg)}
+    p = {"norm1": norm_init(cfg.d_model),
+         "attn": attn.attn_init(r[0], cfg),
+         "norm2": norm_init(cfg.d_model)}
+    if kind == "attn_moe":
+        p["moe"] = moe_mod.moe_init(r[1], cfg)
+    else:
+        p["mlp"] = mlp_init(r[1], cfg.d_model, cfg.d_ff, cfg.activation)
+    if kind == "xattn":
+        p["norm_x"] = norm_init(cfg.d_model)
+        p["xattn"] = attn.attn_init(r[2], cfg)
+        p["mlp"] = mlp_init(r[3], cfg.d_model, cfg.d_ff, cfg.activation)
+    return p
+
+
+def _layer_kind(cfg: ModelConfig) -> str:
+    if cfg.family == "ssm":
+        return "mamba1" if cfg.ssm.version == 1 else "mamba2"
+    if cfg.family == "hybrid":
+        return "mamba2" if cfg.ssm.version == 2 else "mamba1"
+    if cfg.family == "moe":
+        return "attn_moe"
+    if cfg.family == "encdec":
+        return "xattn"
+    return "attn_mlp"
+
+
+def _stack_init(rng, cfg: ModelConfig, kind: str, n: int):
+    rngs = jax.random.split(rng, n)
+    leaves = [_block_init(r, cfg, kind) for r in rngs]
+
+    def is_leaf(x):
+        return isinstance(x, Leaf)
+
+    def stack(*ls):
+        return Leaf(jnp.stack([l.value for l in ls]),
+                    ("layers",) + ls[0].axes)
+    return jax.tree_util.tree_map(stack, *leaves, is_leaf=is_leaf)
+
+
+def init_params(cfg: ModelConfig, rng) -> Tuple[Pytree, Pytree]:
+    """Returns (params, logical-axes tree)."""
+    r = jax.random.split(rng, 6)
+    kind = _layer_kind(cfg)
+    p: Dict[str, Any] = {"embed": embed_init(r[0], cfg.vocab, cfg.d_model)}
+    p["layers"] = _stack_init(r[1], cfg, kind, cfg.n_layers)
+    p["final_norm"] = norm_init(cfg.d_model)
+    if not cfg.tie_embeddings:
+        from repro.models.layers import dense_init
+        p["lm_head"] = dense_init(r[2], cfg.d_model, cfg.vocab,
+                                  ("d_model", "vocab"))
+    if cfg.family == "encdec":
+        p["encoder"] = {
+            "layers": _stack_init(r[3], cfg, "attn_mlp", cfg.encoder.n_layers),
+            "final_norm": norm_init(cfg.d_model),
+        }
+        n_pos = min(cfg.max_seq, 32_768)
+        p["pos"] = Leaf(
+            (jax.random.normal(r[4], (n_pos, cfg.d_model), jnp.float32)
+             * 0.01).astype(jnp.bfloat16), (None, "d_model"))
+    if cfg.family == "hybrid":
+        p["shared_attn"] = _block_init(r[5], cfg, "attn_mlp")
+    return split_leaves(p)
+
+
+# ---------------------------------------------------------------------------
+# helpers
+
+
+ZERO_AUX = lambda: (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32))
+
+
+def _window_schedule(cfg: ModelConfig) -> jnp.ndarray:
+    """Per-layer window sizes; 0 = full attention."""
+    L = cfg.n_layers
+    if cfg.local_global_ratio > 0:
+        k = cfg.local_global_ratio + 1
+        return jnp.array([0 if (i + 1) % k == 0 else cfg.window
+                          for i in range(L)], jnp.int32)
+    return jnp.full((L,), cfg.window, jnp.int32)
+
+
+def _rope_for(cfg: ModelConfig, positions):
+    if cfg.rope_theta <= 0:
+        return None, None
+    dim = cfg.mla.qk_rope_dim if cfg.mla is not None else cfg.resolved_head_dim
+    return rope_tables(positions, dim, cfg.rope_theta)
+
+
+def _embed_tokens(cfg: ModelConfig, p, tokens, pos_offset=0):
+    x = p["embed"][tokens]
+    if cfg.family == "encdec":
+        pe = jax.lax.dynamic_slice_in_dim(p["pos"], pos_offset,
+                                          tokens.shape[1], 0)
+        x = x + pe[None]
+    if cfg.family in ("dense", "vlm", "moe") and cfg.name.startswith("gemma"):
+        x = x * (cfg.d_model ** 0.5)  # gemma embeds are scaled
+    return x.astype(jnp.bfloat16)
+
+
+def _logits(cfg: ModelConfig, p, x):
+    x = apply_norm(cfg.norm, x, p["final_norm"])
+    if cfg.tie_embeddings:
+        return jnp.einsum("bsd,vd->bsv", x, p["embed"])
+    return x @ p["lm_head"]
+
+
+def _encoder_forward(cfg: ModelConfig, p, frames):
+    """frames: (B, n_ctx, d) precomputed (frontend stub).  Whisper encoder."""
+    x = frames.astype(jnp.float32) \
+        + sinusoid_positions(frames.shape[1], cfg.d_model)[None]
+    x = x.astype(jnp.bfloat16)
+
+    def body(x, pl):
+        h, _ = attn.gqa_forward(pl["attn"],
+                                apply_norm(cfg.norm, x, pl["norm1"]),
+                                None, None, cfg=cfg, causal=False)
+        x = x + h
+        h = mlp_apply(pl["mlp"], apply_norm(cfg.norm, x, pl["norm2"]),
+                      cfg.activation)
+        return x + h, ()
+
+    x, _ = jax.lax.scan(jax.checkpoint(body), x, p["encoder"]["layers"])
+    return apply_norm(cfg.norm, x, p["encoder"]["final_norm"])
+
+
+# ---------------------------------------------------------------------------
+# backbone (full-sequence; train and prefill)
+
+
+def _backbone(cfg: ModelConfig, p, x, positions, xa=None, collect=False):
+    """Returns (x, aux(lb, rz), collected-states dict or None)."""
+    cos, sin = _rope_for(cfg, positions)
+
+    if cfg.family == "ssm":
+        from repro.dist import context as dist_ctx
+        impl = dist_ctx.perf_flags().ssm_impl
+        sp_on = dist_ctx.perf_flags().seq_sharded_residual
+
+        def fwd(pp, xx, cc):
+            if cfg.ssm.version == 1:
+                return ssm_mod.mamba1_forward(pp, xx, cc, impl=impl)
+            return ssm_mod.mamba2_forward(pp, xx, cc)
+
+        def body(x, pl):
+            if sp_on:  # Megatron-SP residual (see dense branch)
+                from repro.dist.sharding import constrain
+                x = constrain(x, ("batch", "seq_model", None))
+            h, st = fwd(pl["ssm"], apply_norm(cfg.norm, x, pl["norm1"]), cfg)
+            return x + h, (st if collect else ())
+        x, sts = jax.lax.scan(jax.checkpoint(body), x, p["layers"])
+        return x, ZERO_AUX(), (sts if collect else None)
+
+    if cfg.family == "hybrid":
+        k = cfg.hybrid_attn_every
+        nsb = cfg.n_layers // k
+        shared = p["shared_attn"]
+
+        def superblock(x, pls):
+            def mamba_body(x, pl):
+                h, st = ssm_mod.mamba2_forward(
+                    pl["ssm"], apply_norm(cfg.norm, x, pl["norm1"]), cfg)
+                return x + h, (st if collect else ())
+            x, sts = jax.lax.scan(jax.checkpoint(mamba_body), x, pls)
+            h, kv = attn.gqa_forward(shared["attn"],
+                                     apply_norm(cfg.norm, x, shared["norm1"]),
+                                     cos, sin, cfg=cfg, causal=True)
+            x = x + h
+            h = mlp_apply(shared["mlp"],
+                          apply_norm(cfg.norm, x, shared["norm2"]),
+                          cfg.activation)
+            return x + h, ((sts, kv) if collect else ())
+
+        pls = jax.tree_util.tree_map(
+            lambda t: t.reshape(nsb, k, *t.shape[1:]), p["layers"])
+        x, ys = jax.lax.scan(jax.checkpoint(superblock), x, pls)
+        return x, ZERO_AUX(), (ys if collect else None)
+
+    windows = _window_schedule(cfg)
+
+    # §Perf: static-window grouped scan for local:global archs (gemma3) —
+    # unrolls each (ratio local + 1 global) group so local layers take the
+    # O(S*window) windowed-attention path instead of masked full attention
+    from repro.dist import context as dist_ctx
+    flags = dist_ctx.perf_flags()
+    if (cfg.local_global_ratio > 0 and flags.windowed_attention
+            and cfg.mla is None and xa is None and cfg.window > 0):
+        grp = cfg.local_global_ratio + 1
+        nsb = cfg.n_layers // grp
+        tail = cfg.n_layers - nsb * grp
+        win_sched = [0 if (i + 1) % grp == 0 else cfg.window
+                     for i in range(cfg.n_layers)]  # static python ints
+
+        def one_layer(x, lb, rz, pl, sw):
+            h_in = apply_norm(cfg.norm, x, pl["norm1"])
+            h, kv = attn.gqa_forward(pl["attn"], h_in, cos, sin, cfg=cfg,
+                                     causal=True, static_window=sw)
+            x = x + h
+            h_in = apply_norm(cfg.norm, x, pl["norm2"])
+            if "moe" in pl:
+                h, aux = moe_mod.moe_apply(pl["moe"], h_in, cfg)
+                lb, rz = lb + aux["load_balance"], rz + aux["router_z"]
+            else:
+                h = mlp_apply(pl["mlp"], h_in, cfg.activation)
+            return x + h, lb, rz, kv
+
+        def group_body(carry, pls):
+            x, lb, rz = carry
+            kvs = []
+            for i in range(grp):
+                pl = jax.tree_util.tree_map(lambda t: t[i], pls)
+                sw = win_sched[i] or None  # schedule is periodic per group
+                x, lb, rz, kv = one_layer(x, lb, rz, pl, sw)
+                kvs.append(kv)
+            ys = ()
+            if collect:
+                ys = (jnp.stack([k for k, _ in kvs]),
+                      jnp.stack([v for _, v in kvs]))
+            return (x, lb, rz), ys
+
+        head = jax.tree_util.tree_map(
+            lambda t: t[:nsb * grp].reshape(nsb, grp, *t.shape[1:]),
+            p["layers"])
+        lb0, rz0 = ZERO_AUX()
+        (x, lb, rz), ys = jax.lax.scan(jax.checkpoint(group_body),
+                                       (x, lb0, rz0), head)
+        tail_kvs = []
+        for j in range(tail):  # remainder layers (26 = 4*6 + 2 for gemma3)
+            li = nsb * grp + j
+            pl = jax.tree_util.tree_map(lambda t: t[li], p["layers"])
+            x, lb, rz, kv = one_layer(x, lb, rz, pl, win_sched[li] or None)
+            tail_kvs.append(kv)
+        L = cfg.n_layers
+        collected = None
+        if collect:
+            k_all = ys[0].reshape(nsb * grp, *ys[0].shape[2:])
+            v_all = ys[1].reshape(nsb * grp, *ys[1].shape[2:])
+            if tail_kvs:
+                k_all = jnp.concatenate(
+                    [k_all, jnp.stack([k for k, _ in tail_kvs])])
+                v_all = jnp.concatenate(
+                    [v_all, jnp.stack([v for _, v in tail_kvs])])
+            collected = ((k_all, v_all), ())
+        return x, (lb / L, rz / L), collected
+
+    def _sp(x):
+        """Megatron-SP (§Perf): keep the residual stream sequence-sharded
+        over 'model' between blocks; XLA then emits reduce-scatter before
+        the (sharded) norm/residual and all-gather after — same ring wire
+        bytes as the all-reduce but norms/adds touch 1/tp of the bytes."""
+        if not flags.seq_sharded_residual:
+            return x
+        from repro.dist.sharding import constrain
+        return constrain(x, ("batch", "seq_model", None))
+
+    def body(carry, xs):
+        x, lb, rz = carry
+        pl, window = xs
+        x = _sp(x)
+        h_in = apply_norm(cfg.norm, x, pl["norm1"])
+        if cfg.mla is not None:
+            h, kv = attn.mla_forward(pl["attn"], h_in, cos, sin, cfg=cfg)
+        else:
+            h, kv = attn.gqa_forward(pl["attn"], h_in, cos, sin, cfg=cfg,
+                                     causal=True, window=window)
+        x = x + h
+        xkv = ()
+        if xa is not None:
+            h, xkv = attn.gqa_forward(pl["xattn"],
+                                      apply_norm(cfg.norm, x, pl["norm_x"]),
+                                      None, None, cfg=cfg, causal=False,
+                                      xa=xa)
+            x = x + h
+        h_in = apply_norm(cfg.norm, x, pl["norm2"])
+        if "moe" in pl:
+            h, aux = moe_mod.moe_apply(pl["moe"], h_in, cfg)
+            lb, rz = lb + aux["load_balance"], rz + aux["router_z"]
+        else:
+            h = mlp_apply(pl["mlp"], h_in, cfg.activation)
+        return (x + h, lb, rz), ((kv, xkv) if collect else ())
+
+    lb0, rz0 = ZERO_AUX()
+    (x, lb, rz), ys = jax.lax.scan(jax.checkpoint(body), (x, lb0, rz0),
+                                   (p["layers"], windows))
+    L = cfg.n_layers
+    return x, (lb / L, rz / L), (ys if collect else None)
+
+
+# ---------------------------------------------------------------------------
+# train
+
+
+def _prepare_inputs(cfg: ModelConfig, params, batch):
+    tokens = batch["tokens"]
+    x = _embed_tokens(cfg, params, tokens)
+    xa = None
+    if cfg.family == "encdec":
+        xa = _encoder_forward(cfg, params, batch["frames"])
+    if cfg.family == "vlm":
+        x = jnp.concatenate([batch["patches"].astype(x.dtype), x], axis=1)
+    return x, xa
+
+
+def train_forward(cfg: ModelConfig, params, batch):
+    x, xa = _prepare_inputs(cfg, params, batch)
+    positions = jnp.arange(x.shape[1])
+    x, (lb, rz), _ = _backbone(cfg, params, x, positions, xa=xa)
+    if cfg.family == "vlm":
+        x = x[:, cfg.n_patches:]
+    return _logits(cfg, params, x), {"load_balance": lb, "router_z": rz}
+
+
+def loss_fn(cfg: ModelConfig, params, batch):
+    logits, aux = train_forward(cfg, params, batch)
+    labels = batch["labels"]
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    label_logit = jnp.take_along_axis(logits, labels[..., None],
+                                      axis=-1)[..., 0]
+    nll = jnp.mean(logz - label_logit)
+    zloss = 1e-4 * jnp.mean(logz ** 2)
+    moe_loss = jnp.zeros((), jnp.float32)
+    if cfg.moe is not None:
+        moe_loss = (cfg.moe.aux_loss_coef * aux["load_balance"]
+                    + cfg.moe.router_z_coef * aux["router_z"])
+    loss = nll + zloss + moe_loss
+    metrics = {"loss": loss, "nll": nll, "zloss": zloss, "moe_loss": moe_loss}
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# serving: cache init / prefill / decode
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int):
+    """Returns (cache, logical-axes tree)."""
+    L, hd = cfg.n_layers, cfg.resolved_head_dim
+    Hkv = cfg.n_kv_heads
+    c: Dict[str, Any] = {}
+
+    def kv_leaf(n_layers, seq, axes_seq="kv_seq"):
+        # "head_dim" is shardable as the MQA fallback (see dist.sharding)
+        return Leaf(jnp.zeros((n_layers, batch, Hkv, seq, hd), jnp.bfloat16),
+                    ("layers", "batch", "kv_heads", axes_seq, "head_dim"))
+
+    if cfg.family == "ssm":
+        s = cfg.ssm
+        d_in = s.expand * cfg.d_model
+        conv_dim = d_in if s.version == 1 else d_in + 2 * s.d_state
+        c["conv"] = Leaf(jnp.zeros((L, batch, conv_dim, s.d_conv - 1),
+                                   jnp.bfloat16),
+                         ("layers", "batch", "d_inner", None))
+        if s.version == 1:
+            c["ssm"] = Leaf(jnp.zeros((L, batch, d_in, s.d_state),
+                                      jnp.float32),
+                            ("layers", "batch", "d_inner", None))
+        else:
+            c["ssm"] = Leaf(jnp.zeros((L, batch, s.n_heads, s.head_dim,
+                                       s.d_state), jnp.float32),
+                            ("layers", "batch", "ssm_heads", None, None))
+    elif cfg.family == "hybrid":
+        s = cfg.ssm
+        d_in = s.expand * cfg.d_model
+        nsb = L // cfg.hybrid_attn_every
+        conv_dim = d_in + 2 * s.d_state
+        c["conv"] = Leaf(jnp.zeros((L, batch, conv_dim, s.d_conv - 1),
+                                   jnp.bfloat16),
+                         ("layers", "batch", "d_inner", None))
+        c["ssm"] = Leaf(jnp.zeros((L, batch, s.n_heads, s.head_dim,
+                                   s.d_state), jnp.float32),
+                        ("layers", "batch", "ssm_heads", None, None))
+        c["k"] = kv_leaf(nsb, max_seq)
+        c["v"] = kv_leaf(nsb, max_seq)
+    elif cfg.mla is not None:
+        m = cfg.mla
+        c["ckv"] = Leaf(jnp.zeros((L, batch, max_seq, m.kv_lora_rank),
+                                  jnp.bfloat16),
+                        ("layers", "batch", "kv_seq", "kv_lora"))
+        c["krope"] = Leaf(jnp.zeros((L, batch, max_seq, m.qk_rope_dim),
+                                    jnp.bfloat16),
+                          ("layers", "batch", "kv_seq", None))
+    else:
+        c["k"] = kv_leaf(L, max_seq)
+        c["v"] = kv_leaf(L, max_seq)
+        if cfg.family == "encdec":
+            c["xk"] = kv_leaf(L, cfg.encoder.n_ctx, axes_seq=None)
+            c["xv"] = kv_leaf(L, cfg.encoder.n_ctx, axes_seq=None)
+    return split_leaves(c)
+
+
+def prefill_forward(cfg: ModelConfig, params, batch,
+                    max_seq: Optional[int] = None):
+    """Runs the full prompt, returns (last-token logits, filled cache)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    prompt_len = S + (cfg.n_patches if cfg.family == "vlm" else 0)
+    max_seq = max(max_seq or prompt_len, prompt_len)
+    x, xa = _prepare_inputs(cfg, params, batch)
+    positions = jnp.arange(x.shape[1])
+    x, _, collected = _backbone(cfg, params, x, positions, xa=xa,
+                                collect=True)
+    cache, _ = init_cache(cfg, B, max_seq)
+
+    if cfg.family == "ssm":
+        cache["conv"] = collected["conv"].astype(cache["conv"].dtype)
+        cache["ssm"] = collected["ssm"]
+    elif cfg.family == "hybrid":
+        sts, kv = collected
+        cache["conv"] = sts["conv"].reshape(cache["conv"].shape).astype(
+            cache["conv"].dtype)
+        cache["ssm"] = sts["ssm"].reshape(cache["ssm"].shape)
+        k, v = kv
+        cache["k"] = _fill_kv(cache["k"], k)
+        cache["v"] = _fill_kv(cache["v"], v)
+    elif cfg.mla is not None:
+        kv, _ = collected
+        ckv, krope = kv                                # (L,B,S,·)
+        cache["ckv"] = jax.lax.dynamic_update_slice(
+            cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, 0, 0, 0))
+        cache["krope"] = jax.lax.dynamic_update_slice(
+            cache["krope"], krope.astype(cache["krope"].dtype), (0, 0, 0, 0))
+    else:
+        kv, xkv = collected
+        cache["k"] = _fill_kv(cache["k"], kv[0])
+        cache["v"] = _fill_kv(cache["v"], kv[1])
+        if cfg.family == "encdec":
+            cache["xk"] = xkv[0].astype(cache["xk"].dtype)
+            cache["xv"] = xkv[1].astype(cache["xv"].dtype)
+    if cfg.family == "vlm":
+        pass  # note: patch prefix occupies cache positions [0, n_patches)
+    logits = _logits(cfg, params, x[:, -1:])
+    return logits, cache
+
+
+def _fill_kv(cache_kv, new):
+    return jax.lax.dynamic_update_slice(
+        cache_kv, new.astype(cache_kv.dtype), (0,) * cache_kv.ndim)
+
+
+# ---------------------------------------------------------------------------
+# decode
+
+
+def decode_forward(cfg: ModelConfig, params, cache, tokens, pos):
+    """One decode step.  tokens: (B, 1); pos: scalar position (traced ok).
+    Returns (logits (B, 1, V), new cache)."""
+    x = _embed_tokens_decode(cfg, params, tokens, pos)
+    positions = jnp.full((1,), pos)
+    cos, sin = _rope_for(cfg, positions)
+
+    if cfg.family == "ssm":
+        dec = (ssm_mod.mamba1_decode if cfg.ssm.version == 1
+               else ssm_mod.mamba2_decode)
+
+        def body(x, xs):
+            pl, conv, st = xs
+            h, new = dec(pl["ssm"], apply_norm(cfg.norm, x, pl["norm1"]),
+                         {"conv": conv, "ssm": st}, cfg)
+            return x + h, (new["conv"], new["ssm"])
+        x, (conv, st) = jax.lax.scan(
+            body, x, (params["layers"], cache["conv"], cache["ssm"]))
+        return _logits(cfg, params, x), dict(cache, conv=conv, ssm=st)
+
+    if cfg.family == "hybrid":
+        k = cfg.hybrid_attn_every
+        nsb = cfg.n_layers // k
+        shared = params["shared_attn"]
+
+        def superblock(x, xs):
+            pls, conv, st, ck, cv = xs
+
+            def mamba_body(x, ys):
+                pl, conv_i, st_i = ys
+                h, new = ssm_mod.mamba2_decode(
+                    pl["ssm"], apply_norm(cfg.norm, x, pl["norm1"]),
+                    {"conv": conv_i, "ssm": st_i}, cfg)
+                return x + h, (new["conv"], new["ssm"])
+            x, (conv, st) = jax.lax.scan(mamba_body, x, (pls, conv, st))
+            h, ck, cv = attn.gqa_decode(
+                shared["attn"], apply_norm(cfg.norm, x, shared["norm1"]),
+                ck, cv, cos, sin, cfg=cfg, pos=pos)
+            x = x + h
+            h = mlp_apply(shared["mlp"],
+                          apply_norm(cfg.norm, x, shared["norm2"]),
+                          cfg.activation)
+            return x + h, (conv, st, ck, cv)
+
+        pls = jax.tree_util.tree_map(
+            lambda t: t.reshape(nsb, k, *t.shape[1:]), params["layers"])
+        conv = cache["conv"].reshape(nsb, k, *cache["conv"].shape[1:])
+        st = cache["ssm"].reshape(nsb, k, *cache["ssm"].shape[1:])
+        x, (conv, st, ck, cv) = jax.lax.scan(
+            superblock, x, (pls, conv, st, cache["k"], cache["v"]))
+        cache = dict(cache, conv=conv.reshape(cache["conv"].shape),
+                     ssm=st.reshape(cache["ssm"].shape), k=ck, v=cv)
+        return _logits(cfg, params, x), cache
+
+    windows = _window_schedule(cfg)
+
+    # §Perf: unrolled decode for local:global archs — local layers read an
+    # O(window) cache SLICE instead of sweeping the full S-long cache
+    from repro.dist import context as _dctx
+    if (_dctx.perf_flags().windowed_attention and cfg.mla is None
+            and cfg.family != "encdec" and cfg.local_global_ratio > 0
+            and cfg.window > 0):
+        grp = cfg.local_global_ratio + 1
+        win_sched = [0 if (i + 1) % grp == 0 else cfg.window
+                     for i in range(cfg.n_layers)]
+        cks, cvs = [], []
+        for li in range(cfg.n_layers):
+            pl = jax.tree_util.tree_map(lambda t: t[li], params["layers"])
+            h, ck, cv = attn.gqa_decode(
+                pl["attn"], apply_norm(cfg.norm, x, pl["norm1"]),
+                cache["k"][li], cache["v"][li], cos, sin, cfg=cfg, pos=pos,
+                static_window=win_sched[li] or None)
+            x = x + h
+            h_in = apply_norm(cfg.norm, x, pl["norm2"])
+            if "moe" in pl:
+                h, _ = moe_mod.moe_apply(pl["moe"], h_in, cfg)
+            else:
+                h = mlp_apply(pl["mlp"], h_in, cfg.activation)
+            x = x + h
+            cks.append(ck)
+            cvs.append(cv)
+        cache = dict(cache, k=jnp.stack(cks), v=jnp.stack(cvs))
+        return _logits(cfg, params, x), cache
+
+    if cfg.mla is not None:
+        def body(x, xs):
+            pl, ckv, krope, _w = xs
+            h, ckv, krope = attn.mla_decode(
+                pl["attn"], apply_norm(cfg.norm, x, pl["norm1"]),
+                ckv, krope, cos, sin, cfg=cfg, pos=pos)
+            x = x + h
+            h_in = apply_norm(cfg.norm, x, pl["norm2"])
+            if "moe" in pl:
+                h, _ = moe_mod.moe_apply(pl["moe"], h_in, cfg)
+            else:
+                h = mlp_apply(pl["mlp"], h_in, cfg.activation)
+            return x + h, (ckv, krope)
+        x, (ckv, krope) = jax.lax.scan(
+            body, x, (params["layers"], cache["ckv"], cache["krope"],
+                      windows))
+        return _logits(cfg, params, x), dict(cache, ckv=ckv, krope=krope)
+
+    is_encdec = cfg.family == "encdec"
+
+    def body(x, xs):
+        if is_encdec:
+            pl, ck, cv, window, xk, xv = xs
+        else:
+            pl, ck, cv, window = xs
+        h, ck, cv = attn.gqa_decode(
+            pl["attn"], apply_norm(cfg.norm, x, pl["norm1"]),
+            ck, cv, cos, sin, cfg=cfg, pos=pos, window=window)
+        x = x + h
+        if is_encdec:
+            h, _, _ = attn.gqa_decode(
+                pl["xattn"], apply_norm(cfg.norm, x, pl["norm_x"]),
+                None, None, None, None, cfg=cfg, pos=pos, xa_kv=(xk, xv))
+            x = x + h
+        h_in = apply_norm(cfg.norm, x, pl["norm2"])
+        if "moe" in pl:
+            h, _ = moe_mod.moe_apply(pl["moe"], h_in, cfg)
+        else:
+            h = mlp_apply(pl["mlp"], h_in, cfg.activation)
+        return x + h, (ck, cv)
+
+    if is_encdec:
+        xs = (params["layers"], cache["k"], cache["v"], windows,
+              cache["xk"], cache["xv"])
+    else:
+        xs = (params["layers"], cache["k"], cache["v"], windows)
+    x, (ck, cv) = jax.lax.scan(body, x, xs)
+    return _logits(cfg, params, x), dict(cache, k=ck, v=cv)
+
+
+def _embed_tokens_decode(cfg: ModelConfig, p, tokens, pos):
+    x = p["embed"][tokens]
+    if cfg.family == "encdec":
+        x = x + jax.lax.dynamic_slice_in_dim(p["pos"], pos, 1, 0)[None]
+    if cfg.family in ("dense", "vlm", "moe") and cfg.name.startswith("gemma"):
+        x = x * (cfg.d_model ** 0.5)
+    return x.astype(jnp.bfloat16)

@@ -1,0 +1,91 @@
+"""Optimizers (AdamW, SGD-momentum), gradient clipping, LR schedules.
+
+Self-contained (no optax).  Optimizer states mirror the parameter pytree so
+they inherit the parameter shardings 1:1.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / jnp.maximum(warmup, 1)
+        frac = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1),
+                        0.0, 1.0)
+        cos = 0.5 * base_lr * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def clip_by_global_norm(grads: Pytree, max_norm: float):
+    leaves = jax.tree_util.tree_leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), gn
+
+
+def adamw_init(params: Pytree) -> Dict[str, Any]:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree_util.tree_map(zeros, params),
+        "v": jax.tree_util.tree_map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(grads, state, params, *, lr, b1=0.9, b2=0.95, eps=1e-8,
+                 weight_decay=0.1):
+    count = state["count"] + 1
+    c = count.astype(jnp.float32)
+    bc1 = 1 - b1 ** c
+    bc2 = 1 - b2 ** c
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g32
+        v = b2 * v + (1 - b2) * g32 * g32
+        mhat = m / bc1
+        vhat = v / bc2
+        step = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(
+            jnp.float32)
+        return m, v, (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    flat_p = treedef.flatten_up_to(params)
+    out = [upd(g, m, v, p) for g, m, v, p in
+           zip(flat_g, flat_m, flat_v, flat_p)]
+    new_m = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_v = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_p = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "count": count}
+
+
+def sgd_init(params: Pytree) -> Dict[str, Any]:
+    return {"mom": jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "count": jnp.zeros((), jnp.int32)}
+
+
+def sgd_update(grads, state, params, *, lr, momentum=0.9):
+    def upd(g, m, p):
+        m = momentum * m + g.astype(jnp.float32)
+        return m, (p.astype(jnp.float32) - lr * m).astype(p.dtype)
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_m = treedef.flatten_up_to(state["mom"])
+    flat_p = treedef.flatten_up_to(params)
+    out = [upd(g, m, p) for g, m, p in zip(flat_g, flat_m, flat_p)]
+    return (jax.tree_util.tree_unflatten(treedef, [o[1] for o in out]),
+            {"mom": jax.tree_util.tree_unflatten(treedef,
+                                                 [o[0] for o in out]),
+             "count": state["count"] + 1})

@@ -1,0 +1,2 @@
+from repro.train.step import (  # noqa: F401
+    TrainConfig, make_train_step, init_train_state)

@@ -1,0 +1,70 @@
+"""Optimizers, schedules, and the camera ISP / energy models."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import (adamw_init, adamw_update, clip_by_global_norm,
+                         cosine_schedule, sgd_init, sgd_update)
+
+
+def test_adamw_minimizes_quadratic():
+    params = {"w": jnp.asarray([3.0, -2.0, 1.5])}
+    opt = adamw_init(params)
+    target = jnp.asarray([1.0, 1.0, 1.0])
+    for _ in range(300):
+        g = {"w": 2 * (params["w"] - target)}
+        params, opt = adamw_update(g, opt, params, lr=5e-2, weight_decay=0.0)
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target),
+                               atol=1e-2)
+
+
+def test_sgd_momentum_minimizes():
+    params = {"w": jnp.asarray([4.0])}
+    opt = sgd_init(params)
+    for _ in range(200):
+        g = {"w": 2 * params["w"]}
+        params, opt = sgd_update(g, opt, params, lr=1e-2)
+    assert abs(float(params["w"][0])) < 1e-2
+
+
+def test_cosine_schedule_shape():
+    lr = cosine_schedule(1e-3, warmup=10, total=100)
+    assert float(lr(0)) == 0.0
+    assert float(lr(10)) == pytest.approx(1e-3, rel=1e-5)
+    assert float(lr(100)) == pytest.approx(0.0, abs=1e-9)
+    assert float(lr(5)) == pytest.approx(5e-4, rel=1e-5)
+
+
+def test_grad_clip():
+    g = {"a": jnp.ones((4,)) * 10.0}
+    clipped, gn = clip_by_global_norm(g, 1.0)
+    assert float(gn) == pytest.approx(20.0)
+    total = float(jnp.sqrt(jnp.sum(clipped["a"] ** 2)))
+    assert total == pytest.approx(1.0, rel=1e-5)
+
+
+def test_camera_isp_shapes_and_range():
+    from repro.apps.camera import camera_pipeline
+    raw = np.random.default_rng(0).random((64, 96), dtype=np.float32)
+    rgb, dnn_in = camera_pipeline(raw, dnn_hw=(16, 16))
+    assert rgb.shape == (64, 96, 3)
+    assert dnn_in.shape == (16, 16, 3)
+    assert float(jnp.min(rgb)) >= 0.0 and float(jnp.max(rgb)) <= 1.0
+    assert not bool(jnp.isnan(rgb).any())
+
+
+def test_energy_model_monotone():
+    from repro.core.energy import DEFAULT_ENERGY as em
+    assert em.hbm(2e9) == pytest.approx(2 * em.hbm(1e9))
+    assert em.compute(1e12) > 0
+    # HBM access costs far more per byte than VMEM
+    assert em.pj_per_byte_hbm > 10 * em.pj_per_byte_vmem
+
+
+def test_checkpoint_manager_error_propagates(tmp_path):
+    from repro.ckpt import CheckpointManager
+    mgr = CheckpointManager(str(tmp_path / "nope\x00bad"), keep=1)
+    mgr.save_async(1, {"w": jnp.ones(3)})
+    with pytest.raises(BaseException):
+        mgr.wait()

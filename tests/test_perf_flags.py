@@ -1,0 +1,141 @@
+"""Beyond-paper optimization paths (PerfFlags) preserve semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.dist import context as dist_ctx
+from repro.models import transformer as T
+from repro.models.attention import chunked_attention, windowed_attention
+
+
+@pytest.fixture(autouse=True)
+def _reset_flags():
+    yield
+    dist_ctx.set_perf_flags(dist_ctx.PerfFlags())
+
+
+def test_windowed_matches_masked_chunked():
+    B, H, Hkv, S, D, w = 1, 4, 2, 256, 16, 32
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, H, S, D))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, Hkv, S, D))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, Hkv, S, D))
+    a = windowed_attention(q, k, v, window=w, chunk=64)
+    b = chunked_attention(q, k, v, causal=True, window=w, chunk=64)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
+
+
+def test_attn_remat_chunk_same_grads():
+    B, H, S, D = 1, 2, 128, 16
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, H, S, D))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, H, S, D))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, H, S, D))
+
+    def loss(q):
+        return jnp.sum(chunked_attention(q, k, v, causal=True, chunk=32) ** 2)
+
+    g_base = jax.grad(loss)(q)
+    dist_ctx.set_perf_flags(dist_ctx.PerfFlags(attn_remat_chunk=True))
+    g_remat = jax.grad(loss)(q)
+    np.testing.assert_allclose(np.asarray(g_base), np.asarray(g_remat),
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("arch,flags", [
+    ("gemma3_1b", dict(attn_remat_chunk=True, windowed_attention=True)),
+    ("falcon_mamba_7b", dict(ssm_impl="chunked")),
+    ("phi3_mini_3_8b", dict(attn_remat_chunk=True)),
+])
+def test_flagged_forward_matches_baseline(arch, flags):
+    cfg = get_smoke_config(arch)
+    params, _ = T.init_params(cfg, jax.random.PRNGKey(0))
+    batch = {"tokens": jnp.asarray(
+        np.random.default_rng(0).integers(0, cfg.vocab, (2, 32)), jnp.int32)}
+    base, _ = T.train_forward(cfg, params, batch)
+    dist_ctx.set_perf_flags(dist_ctx.PerfFlags(**flags))
+    opt, _ = T.train_forward(cfg, params, batch)
+    np.testing.assert_allclose(np.asarray(base, np.float32),
+                               np.asarray(opt, np.float32),
+                               rtol=0.05, atol=0.05)
+
+
+def test_ssm_chunked_matches_scan_gradients():
+    from repro.models.ssm import mamba1_forward, mamba1_init
+    cfg = get_smoke_config("falcon_mamba_7b")
+    p = mamba1_init(jax.random.PRNGKey(0), cfg)
+    from repro.models.layers import split_leaves
+    p, _ = split_leaves(p)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, cfg.d_model),
+                          jnp.float32).astype(jnp.bfloat16)
+
+    def loss(x, impl):
+        y, _ = mamba1_forward(p, x, cfg, impl=impl)
+        return jnp.sum(y.astype(jnp.float32) ** 2)
+
+    g1 = jax.grad(lambda x: loss(x, "scan"))(x)
+    g2 = jax.grad(lambda x: loss(x, "chunked"))(x)
+    np.testing.assert_allclose(np.asarray(g1, np.float32),
+                               np.asarray(g2, np.float32), rtol=0.1,
+                               atol=0.1)
+
+
+def test_windowed_prefill_cache_compatible():
+    """Optimized (windowed) prefill fills a cache the decode path can
+    continue from, matching the baseline prefill."""
+    import numpy as np
+    cfg = get_smoke_config("gemma3_1b")
+    params, _ = T.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 9), 0, cfg.vocab)
+    ref, cache_ref = T.prefill_forward(cfg, params, {"tokens": toks[:, :8]},
+                                       max_seq=12)
+    dist_ctx.set_perf_flags(dist_ctx.PerfFlags(windowed_attention=True,
+                                               attn_remat_chunk=True))
+    opt, cache_opt = T.prefill_forward(cfg, params, {"tokens": toks[:, :8]},
+                                       max_seq=12)
+    dist_ctx.set_perf_flags(dist_ctx.PerfFlags())
+    np.testing.assert_allclose(np.asarray(ref, np.float32),
+                               np.asarray(opt, np.float32), atol=0.05)
+    ld_ref, _ = T.decode_forward(cfg, params, cache_ref, toks[:, 8:9], 8)
+    ld_opt, _ = T.decode_forward(cfg, params, cache_opt, toks[:, 8:9], 8)
+    np.testing.assert_allclose(np.asarray(ld_ref, np.float32),
+                               np.asarray(ld_opt, np.float32), atol=0.05)
+
+
+def test_moe_einsum_dispatch_matches_gather():
+    import dataclasses
+    import numpy as np
+    cfg = get_smoke_config("granite_moe_1b_a400m")
+    cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+        cfg.moe, capacity_factor=8.0))
+    from repro.models import moe as M
+    from repro.models.layers import split_leaves
+    p, _ = split_leaves(M.moe_init(jax.random.PRNGKey(0), cfg))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model)
+                          ).astype(jnp.bfloat16)
+    a, _ = M.moe_apply(p, x, cfg)
+    b, _ = M.moe_apply_einsum(p, x, cfg)
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32), atol=0.05)
+
+
+def test_windowed_decode_matches_baseline():
+    """Sliced-cache decode (static_window) == full-cache masked decode."""
+    import numpy as np
+    cfg = get_smoke_config("gemma3_1b")
+    params, _ = T.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0, cfg.vocab)
+    _, cache = T.prefill_forward(cfg, params, {"tokens": toks[:, :10]},
+                                 max_seq=16)
+    ref, cache_ref = T.decode_forward(cfg, params, cache, toks[:, 10:11], 10)
+    dist_ctx.set_perf_flags(dist_ctx.PerfFlags(windowed_attention=True))
+    opt, cache_opt = T.decode_forward(cfg, params, cache, toks[:, 10:11], 10)
+    step2_opt, _ = T.decode_forward(cfg, params, cache_opt,
+                                    toks[:, 11:12], 11)
+    dist_ctx.set_perf_flags(dist_ctx.PerfFlags())
+    step2_ref, _ = T.decode_forward(cfg, params, cache_ref,
+                                    toks[:, 11:12], 11)
+    np.testing.assert_allclose(np.asarray(ref, np.float32),
+                               np.asarray(opt, np.float32), atol=0.05)
+    np.testing.assert_allclose(np.asarray(step2_ref, np.float32),
+                               np.asarray(step2_opt, np.float32), atol=0.05)

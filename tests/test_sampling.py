@@ -1,0 +1,36 @@
+"""Sampled-simulation (loop tree) tests — §II-E1 analogue."""
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sampling import (LoopNode, measure_sampled, sampling_error,
+                                 unsample)
+
+
+def test_unsample_linear_exact():
+    # cost(n) = startup + n*per_iter must unsample exactly from 2 samples
+    fn = lambda n: 7e-6 + n * 3e-4
+    node = measure_sampled(fn, trips=1000, sample=2)
+    assert sampling_error(unsample(node), fn(1000)) < 1e-9
+
+
+@given(startup=st.floats(0, 1e-3), per=st.floats(1e-6, 1e-2),
+       trips=st.integers(2, 10_000),
+       sample=st.integers(2, 64))
+@settings(max_examples=60, deadline=None)
+def test_unsample_property(startup, per, trips, sample):
+    fn = lambda n: startup + n * per
+    node = measure_sampled(fn, trips=trips, sample=sample)
+    assert sampling_error(unsample(node), fn(trips)) < 1e-6
+
+
+def test_nested_tree():
+    # layers(22) x chunks(8): body 1ms per chunk + 2ms layer overhead
+    tree = LoopNode("step", trips=1, children=[
+        LoopNode("layers", trips=22, body_cost=2e-3, children=[
+            LoopNode("chunks", trips=8, body_cost=1e-3)])])
+    assert abs(unsample(tree) - 22 * (2e-3 + 8e-3)) < 1e-12
+
+
+def test_sampling_factor():
+    tree = LoopNode("run", trips=1, children=[
+        LoopNode("iters", trips=100, body_cost=1.0, sampled_trips=2)])
+    assert abs(tree.sampling_factor() - 50.0) < 1e-9

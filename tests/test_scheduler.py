@@ -1,0 +1,78 @@
+"""Runtime-scheduler simulation: invariants (hypothesis) + paper behaviors."""
+import threading
+import time
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core.scheduler import ThreadPool, TileTask, simulate
+
+task_st = st.lists(
+    st.tuples(st.floats(1e-6, 1e-2), st.sampled_from([None, "a", "b"])),
+    min_size=1, max_size=40)
+
+
+@given(tasks=task_st, n=st.integers(1, 8))
+@settings(max_examples=60, deadline=None)
+def test_makespan_bounds(tasks, n):
+    ts = [TileTask(f"t{i}", duration=d, affinity=a)
+          for i, (d, a) in enumerate(tasks)]
+    tl = simulate(ts, n)
+    total = sum(t.duration for t in ts)
+    longest = max(t.duration for t in ts)
+    # work conservation: makespan within [max(W/n, longest), W]
+    assert tl.makespan <= total + 1e-12
+    assert tl.makespan >= max(total / n, longest) - 1e-12
+    # affinity: all tasks with the same key ran on one worker
+    for key in ("a", "b"):
+        workers = {e.worker for e in tl.events
+                   if e.kind == "compute" and any(
+                       t.name == e.name and t.affinity == key for t in ts)}
+        assert len(workers) <= 1
+
+
+def test_affinity_serializes_reduction_tiles():
+    """Paper Fig 14: tiles whose partials reduce in place share one queue,
+    capping speedup below worker count."""
+    ts = [TileTask(f"r{i}", duration=1e-3, affinity="out0") for i in range(8)]
+    tl = simulate(ts, 8)
+    assert abs(tl.makespan - 8e-3) < 1e-9
+    ts = [TileTask(f"r{i}", duration=1e-3) for i in range(8)]
+    tl = simulate(ts, 8)
+    assert abs(tl.makespan - 1e-3) < 1e-9
+
+
+def test_multi_worker_scaling_saturates():
+    """Fig 12 shape: speedup scales until tile-level parallelism runs out."""
+    ts = [TileTask(f"t{i}", duration=1e-3) for i in range(8)]
+    m1 = simulate(ts, 1).makespan
+    m4 = simulate(ts, 4).makespan
+    m16 = simulate(ts, 16).makespan
+    assert m1 / m4 >= 3.9
+    assert abs(m16 - m4 * 4 / 8) < 2e-3 or m16 <= m4  # no gain past 8 tiles
+    assert m16 >= 1e-3
+
+
+def test_dependencies_respected():
+    ts = [TileTask("a", duration=1e-3),
+          TileTask("b", duration=1e-3, deps=("a",)),
+          TileTask("c", duration=1e-3, deps=("b",))]
+    tl = simulate(ts, 4)
+    assert abs(tl.makespan - 3e-3) < 1e-9
+
+
+def test_thread_pool_parallel_and_correct():
+    pool = ThreadPool(4)
+    try:
+        results = pool.map(lambda x: x * x, list(range(32)))
+        assert results == [x * x for x in range(32)]
+        # GIL-releasing workloads actually overlap
+        def sleepy(_):
+            time.sleep(0.02)
+            return threading.current_thread().name
+        t0 = time.time()
+        names = pool.map(sleepy, range(8))
+        elapsed = time.time() - t0
+        assert elapsed < 8 * 0.02 * 0.9  # faster than serial
+        assert len(set(names)) > 1       # multiple workers participated
+    finally:
+        pool.shutdown()

@@ -1,0 +1,65 @@
+"""Sharding rule engine: divisibility guards, SP fallback, cell coverage."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config
+from repro.core.config import SHAPES, SHAPE_BY_NAME
+from repro.dist.sharding import Rules, default_rules, rules_for
+
+
+def _mesh2(d=1, m=1):
+    devs = np.asarray(jax.devices()[:d * m])
+    if devs.size < d * m:
+        pytest.skip("not enough devices")
+    return jax.sharding.Mesh(devs.reshape(d, m), ("data", "model"))
+
+
+def test_divisibility_guard_falls_back_to_replicated():
+    mesh = _mesh2(1, 1)
+    rules = default_rules(mesh)
+    # axis of size 1 -> never sharded
+    assert rules.spec_for(("vocab", "d_model"), (100, 64)) == P()
+
+
+def test_spec_construction():
+    mesh = _mesh2(1, 1)
+    r = Rules(table={"batch": "data", "d_ff": "model"}, mesh=mesh)
+    spec = r.spec_for(("batch", None, "d_ff"), (8, 4, 16))
+    assert spec == P()  # both axes size 1 -> unsharded
+
+
+def test_rules_for_long_context_uses_sequence_parallel():
+    cfg = get_config("gemma3_1b")
+    shape = SHAPE_BY_NAME["long_500k"]
+
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+    r = rules_for(cfg, shape, FakeMesh())
+    assert r.table["batch"] is None          # batch=1 cannot shard
+    assert r.table["kv_seq"] == "data"       # SP takes over
+    # MQA fallback: kv head_dim sharded instead of kv_heads
+    assert r.table["head_dim"] == "model"
+
+
+def test_rules_for_train_shards_batch():
+    cfg = get_config("tinyllama_1_1b")
+    shape = SHAPE_BY_NAME["train_4k"]
+
+    class FakeMesh:
+        shape = {"pod": 2, "data": 16, "model": 16}
+    r = rules_for(cfg, shape, FakeMesh())
+    assert r.table["batch"] == ("pod", "data")
+    assert r.table["heads_x_dim"] == "model"   # 32 % 16 == 0
+    assert r.table["kv_heads_x_dim"] is None   # 4 % 16 != 0 -> replicated
+
+
+def test_all_cells_have_consistent_rules():
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in SHAPES:
+            r = rules_for(cfg, shape, FakeMesh())
+            assert isinstance(r.table, dict)
