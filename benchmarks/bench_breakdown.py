@@ -1,14 +1,17 @@
 """Fig 1 analogue: end-to-end step breakdown (accelerator compute vs data
-transfer vs host/framework vs collectives) per architecture, derived from
-the committed dry-run artifacts via the full-stack simulator."""
+transfer vs host/framework vs collectives) per architecture.
+
+Migrated to the unified engine: each dry-run HLO record lowers to a
+``repro.sim`` Program and ONE engine run yields the breakdown, the roofline
+terms, and the energy of the same simulated execution."""
 from __future__ import annotations
 
 import json
 from pathlib import Path
 
-from repro.configs import get_config
-from repro.core.config import SHAPE_BY_NAME
-from repro.core.simulator import breakdown
+from repro.core.simulator import HOST_OVERHEAD_S
+from repro.sim import engine, ir
+from repro.sim.report import fractions_str, row
 
 
 def run(emit=print):
@@ -23,16 +26,16 @@ def run(emit=print):
             continue
         if r["shape"] != "train_4k":
             continue
-        b = breakdown(r["hlo"], host_prep_s=100e-6)
-        f = b.fractions()
-        rows.append({
-            "name": f"breakdown/{r['arch']}",
-            "us_per_call": round(b.total_s * 1e6, 1),
-            "derived": (f"accel={f['accelerator']*100:.0f}% "
-                        f"transfer={f['transfer']*100:.0f}% "
-                        f"host={f['host']*100:.0f}% "
-                        f"coll={f['collective']*100:.0f}% "
-                        f"(paper: accel ~25%, xfer ~34%, cpu ~42%)")})
+        prog = ir.from_hlo(r["hlo"], name=r["arch"])
+        result = engine.run(prog, engine.EngineConfig(
+            n_workers=1, interface="hbm",
+            host_floor_s=100e-6 + HOST_OVERHEAD_S))
+        b = result.breakdown
+        rows.append(row(
+            f"breakdown/{r['arch']}", b.total_s,
+            f"{fractions_str(b)} "
+            f"step_j={result.energy['total_j']:.2f} "
+            f"(paper: accel ~25%, xfer ~34%, cpu ~42%)"))
     return rows
 
 

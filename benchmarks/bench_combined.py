@@ -1,51 +1,48 @@
 """Fig 18 analogue: stack all three case-study optimizations (fused data
 path + 8 workers + 8 host threads) per paper network and report combined
 end-to-end latency reduction vs the baseline (DMA, 1 accelerator, 1
-thread).  Paper: 42-80% reduction (1.8-5x)."""
+thread).  Paper: 42-80% reduction (1.8-5x).
+
+Migrated to the unified engine: baseline and optimized are just two
+``EngineConfig``s over the same lowered program — interface choice, worker
+count, HBM ports and host threading all compose inside one simulation
+instead of three separate bolt-on sums."""
 from __future__ import annotations
 
-import numpy as np
-
 from repro.configs.paper_nets import PAPER_NETS
-from repro.core.interfaces import acp_transfer, dma_transfer
-from repro.core.scheduler import simulate
-from repro.core.tiling import VMEM_BYTES
+from repro.sim import engine, ir
+from repro.sim.report import row
 from benchmarks.common import build_paper_graph
 
+HOST_DISPATCH_S = 1e-6   # per-tile command-queue push (framework)
+HOST_BW = 20e9           # host-side tiling/untiling memcpy bandwidth
 
-def _endtoend(net, *, n_acc, fused, host_threads):
-    g = build_paper_graph(net, batch=1)
-    tasks = g.tile_tasks(batch=1, max_tile_elems=16384)
-    tl = simulate(tasks, n_acc, shared_bw_penalty=0.05)
-    accel = tl.makespan
-    xfer = host = 0.0
-    for node in g.nodes.values():
-        if node.op in ("input", "weight"):
-            continue
-        nbytes = int(np.prod(node.shape)) * 4
-        n_tiles = max(1, nbytes // (16384 * 4))
-        if fused:
-            resident = 1.0 if nbytes < VMEM_BYTES // 4 else 0.5
-            xfer += acp_transfer(nbytes, resident).seconds
-        else:
-            xfer += dma_transfer(nbytes, n_tiles).seconds
-        # host tiling/untiling: bandwidth-limited, scaled by threads
-        host += 2 * nbytes / 20e9 / host_threads + 3e-6
-    return accel + xfer + host, (accel, xfer, host)
+
+def _config(*, n_acc, fused, host_threads):
+    return engine.EngineConfig(
+        n_workers=n_acc,
+        interface="acp" if fused else "dma",
+        hbm_ports=4,
+        host_dispatch_s=HOST_DISPATCH_S,
+        host_bw=HOST_BW,
+        host_threads=host_threads)
 
 
 def run(emit=print):
     rows = []
     for name, net in PAPER_NETS.items():
-        base, parts_b = _endtoend(net, n_acc=1, fused=False, host_threads=1)
-        opt, parts_o = _endtoend(net, n_acc=8, fused=True, host_threads=8)
-        rows.append({
-            "name": f"combined/{name}",
-            "us_per_call": round(opt * 1e6, 1),
-            "derived": (f"baseline_us={base*1e6:.1f} "
-                        f"speedup={base/opt:.2f}x "
-                        f"reduction={(1-opt/base)*100:.0f}% "
-                        f"(paper: 1.8-5x, 42-80%)")})
+        g = build_paper_graph(net, batch=1)
+        prog = ir.from_graph(g, batch=1, max_tile_elems=16384)
+        base = engine.run(prog, _config(n_acc=1, fused=False,
+                                        host_threads=1))
+        opt = engine.run(prog, _config(n_acc=8, fused=True,
+                                       host_threads=8))
+        rows.append(row(
+            f"combined/{name}", opt.makespan,
+            f"baseline_us={base.makespan*1e6:.1f} "
+            f"speedup={base.makespan/opt.makespan:.2f}x "
+            f"reduction={(1 - opt.makespan/base.makespan)*100:.0f}% "
+            f"(paper: 1.8-5x, 42-80%)"))
     return rows
 
 

@@ -1,47 +1,38 @@
 """Fig 11 analogue: DMA-like vs fused/resident (ACP-analogue) data paths.
 
-For each paper network, sums the modeled inter-op transfer time + energy of
-every intermediate tensor under both interface models."""
+Migrated to the unified engine: the SAME lowered program runs twice, once
+with ``interface="dma"`` (software-managed HBM staging, serialized) and once
+with ``interface="acp"`` (VMEM-resident producer->consumer path); latency
+AND energy come out of each run."""
 from __future__ import annotations
 
-import numpy as np
-
 from repro.configs.paper_nets import PAPER_NETS
-from repro.core.interfaces import acp_transfer, dma_transfer
-from repro.core.tiling import VMEM_BYTES
+from repro.sim import engine, ir
+from repro.sim.report import row
 from benchmarks.common import build_paper_graph
 
 
 def run(emit=print):
-    from repro.core.scheduler import simulate
     rows = []
     for name, net in PAPER_NETS.items():
         g = build_paper_graph(net, batch=1)
-        accel = simulate(g.tile_tasks(batch=1, max_tile_elems=16384),
-                         1).makespan  # 1-accelerator compute time
-        t_dma = e_dma = t_acp = e_acp = 0.0
-        for node in g.nodes.values():
-            if node.op in ("input", "weight"):
-                continue
-            nbytes = int(np.prod(node.shape)) * 4
-            n_tiles = max(1, nbytes // (16384 * 4))
-            d = dma_transfer(nbytes, n_transfers=n_tiles)
-            resident = 1.0 if nbytes < VMEM_BYTES // 4 else 0.5
-            a = acp_transfer(nbytes, resident_fraction=resident)
-            t_dma += d.seconds
-            e_dma += d.energy_j
-            t_acp += a.seconds
-            e_acp += a.energy_j
-        end_dma = accel + t_dma
-        end_acp = accel + t_acp
-        rows.append({
-            "name": f"interfaces/{name}",
-            "us_per_call": round(end_dma * 1e6, 1),
-            "derived": (f"acp_us={end_acp*1e6:.1f} "
-                        f"e2e_speedup={end_dma/end_acp:.2f}x "
-                        f"xfer_speedup={(t_dma/max(t_acp,1e-12)):.0f}x "
-                        f"energy_win={(1 - e_acp/max(e_dma,1e-30))*100:.0f}%"
-                        f" (paper: 17-55% e2e speedup, <=56% energy)")})
+        prog = ir.from_graph(g, batch=1, max_tile_elems=16384)
+        res = {}
+        for iface in ("dma", "acp"):
+            res[iface] = engine.run(prog, engine.EngineConfig(
+                n_workers=1, interface=iface))
+        t_dma = res["dma"].per_kind.get("transfer", 0.0)
+        t_acp = res["acp"].per_kind.get("transfer", 0.0)
+        e_dma = res["dma"].energy["total_j"]
+        e_acp = res["acp"].energy["total_j"]
+        end_dma, end_acp = res["dma"].makespan, res["acp"].makespan
+        rows.append(row(
+            f"interfaces/{name}", end_dma,
+            f"acp_us={end_acp*1e6:.1f} "
+            f"e2e_speedup={end_dma/end_acp:.2f}x "
+            f"xfer_speedup={t_dma/max(t_acp, 1e-12):.0f}x "
+            f"energy_win={(1 - e_acp/max(e_dma, 1e-30))*100:.0f}%"
+            f" (paper: 17-55% e2e speedup, <=56% energy)"))
     return rows
 
 

@@ -1,34 +1,34 @@
-"""Fig 12/13 analogue: multi-accelerator (worker) scaling via the runtime-
-scheduler simulation on the paper's networks, including the reduction-
-affinity cap and shared-bandwidth contention."""
+"""Fig 12/13 analogue: multi-accelerator (worker) scaling on the paper's
+networks via the unified engine — reduction affinity caps the speedup and
+concurrent tile transfers contend for HBM ports (the Fig 13 effect)."""
 from __future__ import annotations
 
 from repro.configs.paper_nets import PAPER_NETS
+from repro.sim import engine, ir
+from repro.sim.report import row
 from benchmarks.common import build_paper_graph
 
 
 def run(emit=print):
-    from repro.core.scheduler import simulate
     rows = []
     for name in ("minerva", "lenet5", "cnn10", "vgg16", "elu16"):
         net = PAPER_NETS[name]
         g = build_paper_graph(net, batch=1)
-        tasks = g.tile_tasks(batch=1, max_tile_elems=2048)
-        # small tiles ~ the paper's 32KB scratchpads -> rich tile-level parallelism
+        # small tiles ~ the paper's 32KB scratchpads -> rich tile parallelism
+        prog = ir.from_graph(g, batch=1, max_tile_elems=2048)
         base = None
         for n_acc in (1, 2, 4, 8):
-            tl = simulate(tasks, n_acc, shared_bw_penalty=0.05)
+            res = engine.run(prog, engine.EngineConfig(
+                n_workers=n_acc, interface="hbm", hbm_ports=4))
             if base is None:
-                base = tl.makespan
-            speed = base / tl.makespan
-            kinds = tl.per_kind()
-            rows.append({
-                "name": f"multiacc/{name}/acc{n_acc}",
-                "us_per_call": round(tl.makespan * 1e6, 1),
-                "derived": (f"speedup={speed:.2f}x "
-                            f"util={tl.utilization():.2f} "
-                            f"xfer_s={kinds.get('transfer', 0):.2e} "
-                            f"tiles={len(tasks)}")})
+                base = res.makespan
+            kinds = res.per_kind
+            rows.append(row(
+                f"multiacc/{name}/acc{n_acc}", res.makespan,
+                f"speedup={base / res.makespan:.2f}x "
+                f"util={res.utilization():.2f} "
+                f"xfer_s={kinds.get('transfer', 0):.2e} "
+                f"tiles={len(prog)}"))
     return rows
 
 

@@ -1,22 +1,26 @@
 """Fig 14 analogue: accelerator-utilization timeline of VGG16's last layers
-on an 8-worker system — shows the reduction-affinity under-utilization the
-paper calls out, plus the camera-pipeline trace (Fig 19) in bench_camera."""
+on an 8-worker system — the reduction-affinity under-utilization the paper
+calls out, rendered from an engine run (the camera-pipeline trace, Fig 19,
+lives in bench_camera)."""
 from __future__ import annotations
 
 from repro.configs.paper_nets import PAPER_NETS
-from repro.core.scheduler import simulate
+from repro.sim import engine, ir
+from repro.sim.report import row
 from benchmarks.common import build_paper_graph
 
 
 def run(emit=print):
     net = PAPER_NETS["vgg16"]
     g = build_paper_graph(net, batch=1)
-    tasks = g.tile_tasks(batch=1, max_tile_elems=16384)
-    tl = simulate(tasks[-120:], 8, shared_bw_penalty=0.05)
-    print(tl.ascii())
-    return [{"name": "timeline/vgg16_tail",
-             "us_per_call": round(tl.makespan * 1e6, 1),
-             "derived": f"util={tl.utilization():.2f} events={len(tl.events)}"}]
+    prog = ir.from_graph(g, batch=1, max_tile_elems=16384)
+    tail = ir.Program(prog.ops[-120:], name="vgg16_tail", source="graph")
+    res = engine.run(tail, engine.EngineConfig(
+        n_workers=8, interface="hbm", hbm_ports=4))
+    print(res.timeline.ascii())
+    return [row("timeline/vgg16_tail", res.makespan,
+                f"util={res.utilization():.2f} "
+                f"events={len(res.timeline.events)}")]
 
 
 if __name__ == "__main__":

@@ -82,3 +82,44 @@ def camera_pipeline(raw, dnn_hw=(32, 32)):
     rgb = gamma(rgb)
     rgb = sharpen(rgb)
     return rgb, downsample(rgb, dnn_hw)
+
+
+# ---------------------------------------------------------------------------
+# engine lowering (Fig 19/20): the ISP stages as a repro.sim Program, so the
+# camera case study composes with the DNN graph in ONE simulated execution
+# (``camera_program(...).then(graph.program())``) instead of a bolt-on sum.
+
+
+def camera_program(hw=(720, 1280), dnn_hw=(32, 32)):
+    """Per-stage (flops, bytes) costs of the ISP at the given raw size."""
+    from repro.sim.ir import BYTES_PER_ELEM, CostedOp, Program
+
+    H, W = hw
+    px = float(H * W)
+    rgb = 3.0 * px
+    # (name, flops, elems_in, elems_out); flops from the stage's arithmetic:
+    # stencil stages count kernel taps, pointwise stages 1-2 ops/elem
+    stages = [
+        ("hot_pixel", 6.0 * px, px, px),            # 4-neighbour min/max+clip
+        ("deinterleave", px, px, px),               # pure data movement
+        ("demosaic", 2.0 * 9.0 * rgb, px, rgb),     # bilinear 3x3 upsample
+        ("white_balance", rgb, rgb, rgb),
+        ("color_correct", 2.0 * 9.0 * px, rgb, rgb),  # 3x3 CCM per pixel
+        ("gamma", 2.0 * rgb, rgb, rgb),             # pow: transcendental
+        ("sharpen", 2.0 * 9.0 * rgb, rgb, rgb),     # 3x3 stencil per channel
+        ("downsample", rgb, rgb, 3.0 * dnn_hw[0] * dnn_hw[1]),
+    ]
+    ops = []
+    prev = None
+    for name, flops, ein, eout in stages:
+        ops.append(CostedOp(
+            name=f"isp/{name}",
+            flops=flops,
+            bytes_in=BYTES_PER_ELEM * ein,
+            bytes_out=BYTES_PER_ELEM * eout,
+            transcendentals=eout if name == "gamma" else 0.0,
+            deps=(prev,) if prev else (),
+            phase="isp"))
+        prev = f"isp/{name}"
+    return Program(ops, name="camera_isp", source="custom",
+                   meta={"hw": hw, "dnn_hw": dnn_hw})

@@ -140,18 +140,21 @@ class Graph:
                         plan[c.name] = n.name
         return plan
 
-    # -- tiling/scheduling view ---------------------------------------------
+    # -- simulation views ----------------------------------------------------
+    def program(self, batch: int = 1, max_tile_elems: int = 16384):
+        """Lower to a ``repro.sim`` Program (the unified engine's IR)."""
+        from repro.sim.ir import from_graph
+        return from_graph(self, batch=batch, max_tile_elems=max_tile_elems)
+
     def tile_tasks(self, batch: int = 1, max_tile_elems: int = 16384):
-        """Map each op to TileTasks for the scheduler simulation (Fig 12)."""
-        from repro.core.graph_ops import node_cost
+        """Legacy TileTask view of :meth:`program` (scheduler compat)."""
         from repro.core.scheduler import TileTask
-        tasks: List[TileTask] = []
-        for name in self.order:
-            n = self.nodes[name]
-            if n.op in ("input", "weight"):
-                continue
-            tasks.extend(node_cost(self, n, batch, max_tile_elems))
-        return tasks
+        from repro.sim import hw
+        return [TileTask(name=op.name,
+                         duration=max(op.flops / hw.PEAK_FLOPS, 1e-9),
+                         transfer=op.bytes / hw.HBM_BW,
+                         affinity=op.affinity, deps=op.deps)
+                for op in self.program(batch, max_tile_elems).ops]
 
 
 def current_graph() -> Graph:

@@ -5,15 +5,11 @@ adapted to the MXU contraction dimension (DESIGN.md §2).
 """
 from __future__ import annotations
 
-from typing import Dict, List
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core.simulator import HBM_BW, PEAK_FLOPS
-from repro.core.tensor import TensorSpec
-from repro.core.tiling import choose_tiling
 
 
 def _activation(kind, x):
@@ -67,58 +63,6 @@ def run_node(g, n, vals: Dict, fused_into: Dict[str, str]):
     return out
 
 
-def node_flops_bytes(n, batch: int = 1):
-    """(flops, bytes) of one node at the given batch."""
-    elems_out = int(np.prod(n.shape)) * batch // max(n.shape[0], 1)
-    if n.op == "convolution":
-        kh, kw, cin, cout = (0, 0, 0, 0)
-        flops = 0
-        # attrs carry stride; kernel shape from the weight input is not
-        # stored on the node, so approximate from attrs if present
-        k = n.attrs.get("kernel", 3)
-        cin = n.attrs.get("cin", n.shape[-1])
-        flops = 2 * elems_out * k * k * cin
-        return flops, 4 * (elems_out * 2)
-    if n.op == "matmul":
-        cin = n.attrs.get("cin", n.shape[-1])
-        flops = 2 * elems_out * cin
-        return flops, 4 * (elems_out * 2 + cin * n.shape[-1])
-    return elems_out, 4 * elems_out * 2
-
-
-def node_cost(g, n, batch: int, max_tile_elems: int) -> List:
-    """Map a node to TileTasks via the tiling optimizer."""
-    from repro.core.scheduler import TileTask
-    if n.op in ("input", "weight"):
-        return []
-    # resolve real kernel/cin from producer weight node when available
-    if n.op in ("convolution", "matmul") and len(n.inputs) > 1:
-        wshape = g.nodes[n.inputs[1]].shape
-        if n.op == "convolution":
-            n.attrs.setdefault("kernel", wshape[0])
-            n.attrs.setdefault("cin", wshape[2])
-        else:
-            n.attrs.setdefault("cin", wshape[0])
-    flops, nbytes = node_flops_bytes(n, batch)
-    shape4 = tuple(n.shape) if len(n.shape) == 4 else \
-        (1, 1, 1, int(np.prod(n.shape)))
-    spec = TensorSpec(shape4, "NHWC", "float32")
-    tiling = choose_tiling(spec, max_tile_elems,
-                           reduce_dim="C" if n.op in ("convolution", "matmul")
-                           else None)
-    n_tiles = max(tiling.n_tiles, 1)
-    per_tile_s = max(flops / n_tiles / PEAK_FLOPS, 1e-9)
-    per_tile_xfer = nbytes / n_tiles / HBM_BW
-    # reduction affinity: convolution tiles that cut the channel (reduce) dim
-    # must land on one queue (in-place partial sums, paper Fig 14)
-    reduce_affinity = "C" in tiling.strategy and n.op == "convolution"
-    tasks = []
-    for i in range(n_tiles):
-        tasks.append(TileTask(
-            name=f"{n.name}/t{i}", duration=per_tile_s,
-            transfer=per_tile_xfer,
-            affinity=(n.name if reduce_affinity else None),
-            deps=tuple(f"{d}/t0" for d in n.inputs
-                       if d in g.nodes and g.nodes[d].op not in
-                       ("input", "weight"))))
-    return tasks
+# NOTE: the per-node tile/cost lowering that used to live here (node_cost /
+# node_flops_bytes) moved to ``repro.sim.ir.from_graph`` — the unified
+# engine's IR is the single place graph nodes become costed work.

@@ -20,11 +20,11 @@ Both are cost models evaluated over the op graph; the Fig 11 analogue
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Optional
 
 from repro.core.energy import DEFAULT_ENERGY, EnergyModel
+from repro.sim.hw import HBM_BW, VMEM_BW  # noqa: F401  (single home)
 
-HBM_BW = 819e9
-VMEM_BW = 11e12        # effective on-chip bandwidth (order-of-magnitude)
 DMA_LAUNCH_S = 2e-6    # per-transfer software+descriptor overhead
 FLUSH_PER_BYTE = 6e-12 # SW coherency-management analogue (staging/copy mgmt)
 
@@ -36,9 +36,11 @@ class TransferCost:
 
 
 def dma_transfer(nbytes: float, n_transfers: int = 1,
-                 em: EnergyModel = DEFAULT_ENERGY) -> TransferCost:
+                 em: EnergyModel = DEFAULT_ENERGY,
+                 hbm_bw: Optional[float] = None) -> TransferCost:
     """HBM round-trip with SW-managed staging (DMA analogue)."""
-    t = (2 * nbytes / HBM_BW          # write + re-read
+    bw = hbm_bw or HBM_BW
+    t = (2 * nbytes / bw              # write + re-read
          + n_transfers * DMA_LAUNCH_S
          + nbytes * FLUSH_PER_BYTE)   # staging management
     e = em.hbm(2 * nbytes) + em.host(nbytes * 0.05)
@@ -46,13 +48,16 @@ def dma_transfer(nbytes: float, n_transfers: int = 1,
 
 
 def acp_transfer(nbytes: float, resident_fraction: float = 1.0,
-                 em: EnergyModel = DEFAULT_ENERGY) -> TransferCost:
+                 em: EnergyModel = DEFAULT_ENERGY,
+                 hbm_bw: Optional[float] = None,
+                 vmem_bw: Optional[float] = None) -> TransferCost:
     """Fused / VMEM-resident path (coherent-port analogue).
 
     resident_fraction: share of the tensor that stays on-chip between
     producer and consumer (1.0 = fully fused; working sets larger than VMEM
     spill the remainder through HBM)."""
     spill = nbytes * (1.0 - resident_fraction)
-    t = (nbytes * resident_fraction) / VMEM_BW + 2 * spill / HBM_BW
+    t = (nbytes * resident_fraction) / (vmem_bw or VMEM_BW) \
+        + 2 * spill / (hbm_bw or HBM_BW)
     e = em.vmem(2 * nbytes * resident_fraction) + em.hbm(2 * spill)
     return TransferCost(t, e)

@@ -14,11 +14,10 @@ Two modes:
 """
 from __future__ import annotations
 
-import heapq
 import queue
 import threading
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, List, Optional, Sequence
 
 from repro.core.timeline import Timeline
 
@@ -37,45 +36,25 @@ def simulate(tasks: Sequence[TileTask], n_workers: int,
              shared_bw_penalty: float = 0.0) -> Timeline:
     """Discrete-event simulation of the worker pool.
 
-    shared_bw_penalty: fractional slowdown of ``transfer`` phases per extra
-    concurrently-transferring worker (memory-bandwidth contention model used
-    in the Fig 13 analogue).
+    Thin wrapper over the unified engine (``repro.sim.engine``): tasks lower
+    to ``CostedOp``s with explicit durations and the engine schedules them
+    (LPT, affinity queues, HBM-port contention).
+
+    ``shared_bw_penalty`` is kept for API compatibility: the old per-extra-
+    transfer fractional slowdown is translated into an equivalent HBM port
+    count (worst-case slowdown ``1 + p*(n-1)`` == ``n_workers / ports``).
     """
-    tl = Timeline()
-    done: Dict[str, float] = {}
-    pending = list(tasks)
-    # per-worker available time; affinity map
-    avail = [0.0] * n_workers
-    affinity_worker: Dict[str, int] = {}
-
-    def eligible(t: TileTask) -> bool:
-        return all(d in done for d in t.deps)
-
-    remaining = len(pending)
-    while remaining:
-        progressed = False
-        ready = [t for t in pending if eligible(t)]
-        for t in sorted(ready, key=lambda t: -t.duration):  # LPT heuristic
-            if t.affinity is not None and t.affinity in affinity_worker:
-                w = affinity_worker[t.affinity]
-            else:
-                w = min(range(n_workers), key=lambda i: avail[i])
-                if t.affinity is not None:
-                    affinity_worker[t.affinity] = w
-            start = max(avail[w], max((done[d] for d in t.deps), default=0.0))
-            n_conc = sum(1 for a in avail if a > start)  # crude concurrency
-            xfer = t.transfer * (1.0 + shared_bw_penalty * max(n_conc - 1, 0))
-            if xfer:
-                tl.add(f"acc{w}", f"{t.name}:xfer", start, xfer, "transfer")
-            tl.add(f"acc{w}", t.name, start + xfer, t.duration, "compute")
-            avail[w] = start + xfer + t.duration
-            done[t.name] = avail[w]
-            pending.remove(t)
-            remaining -= 1
-            progressed = True
-        if not progressed and pending:
-            raise ValueError("dependency cycle in tile tasks")
-    return tl
+    from repro.sim import engine, ir
+    prog = ir.from_tasks(tasks, name="tiles")
+    if shared_bw_penalty > 0.0 and n_workers > 1:
+        # fractional ports keep the translation exact for every pool size
+        # (integer rounding would erase the penalty for small n)
+        ports = n_workers / (1.0 + shared_bw_penalty * (n_workers - 1))
+    else:
+        ports = 0  # one port per worker: no contention
+    cfg = engine.EngineConfig(n_workers=n_workers, interface="hbm",
+                              hbm_ports=ports)
+    return engine.run(prog, cfg).timeline
 
 
 # ---------------------------------------------------------------------------

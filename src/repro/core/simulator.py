@@ -1,56 +1,24 @@
-"""Full-stack simulator: roofline terms + end-to-end breakdown + energy.
+"""Full-stack simulator — stable API over the unified engine (repro.sim).
 
-This is SMAUG's gem5-Aladdin role in our stack: given the analyzed compiled
-artifact (repro.core.hlo) — the "trace" — plus hardware constants, produce:
+This module used to hold a closed-form roofline/breakdown path that never
+talked to the tile scheduler or the interface models.  It is now a thin
+wrapper: ``roofline()`` / ``breakdown()`` / ``energy()`` lower the analyzed
+HLO dict to a ``repro.sim`` Program and read the terms off one engine run,
+so the same simulated execution also yields the Timeline and energy (see
+``repro.sim.engine.run`` for the full result).
 
-  * the three roofline terms (compute / memory / collective), per device,
-  * the dominant bottleneck,
-  * the useful-FLOPs ratio MODEL_FLOPS / HLO_FLOPs,
-  * an end-to-end phase breakdown (accelerator compute vs data transfer vs
-    host/framework time — the Fig 1 analogue),
-  * energy estimates (repro.core.energy).
-
-Hardware (TPU v5e, per assignment): 197 TFLOP/s bf16, 819 GB/s HBM,
-~50 GB/s/link ICI.
+Hardware constants (TPU v5e, per assignment): 197 TFLOP/s bf16, 819 GB/s
+HBM, ~50 GB/s/link ICI — canonical values live in ``repro.sim.hw``.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
 from typing import Dict, Optional
 
 from repro.core.config import ModelConfig, ShapeConfig
 from repro.core.energy import DEFAULT_ENERGY, EnergyModel
-
-PEAK_FLOPS = 197e12          # bf16 per chip
-HBM_BW = 819e9               # bytes/s per chip
-ICI_BW = 50e9                # bytes/s per link
-HOST_OVERHEAD_S = 50e-6      # per-step launch/framework floor (host runtime)
-
-
-@dataclass
-class Roofline:
-    compute_s: float
-    memory_s: float
-    collective_s: float
-    model_flops: float
-    hlo_flops: float
-    useful_ratio: float
-    bound: str
-    step_s: float                # max of terms (+ host floor)
-    roofline_fraction: float     # compute_s / step_s (how close to the
-                                 # compute roof the step runs)
-    detail: Dict = field(default_factory=dict)
-
-    def to_dict(self):
-        return {
-            "compute_s": self.compute_s, "memory_s": self.memory_s,
-            "collective_s": self.collective_s,
-            "model_flops": self.model_flops, "hlo_flops": self.hlo_flops,
-            "useful_ratio": self.useful_ratio, "bound": self.bound,
-            "step_s": self.step_s,
-            "roofline_fraction": self.roofline_fraction,
-            **self.detail,
-        }
+from repro.sim.hw import (HBM_BW, HOST_OVERHEAD_S, ICI_BW,  # noqa: F401
+                          PEAK_FLOPS)
+from repro.sim.report import Breakdown, Roofline  # noqa: F401  (re-export)
 
 
 def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
@@ -76,68 +44,34 @@ def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
     return base
 
 
-def roofline(hlo: Dict, cfg: Optional[ModelConfig], shape: Optional[ShapeConfig],
-             n_chips: int, *, host_s: float = HOST_OVERHEAD_S) -> Roofline:
+def _engine_run(hlo: Dict, *, host_s: float, mf: float = 0.0,
+                n_chips: int = 1):
+    from repro.sim import engine, ir
+    prog = ir.from_hlo(hlo)
+    cfg = engine.EngineConfig(n_workers=1, interface="hbm",
+                              host_floor_s=host_s, n_chips=n_chips)
+    return engine.run(prog, cfg, model_flops=mf)
+
+
+def roofline(hlo: Dict, cfg: Optional[ModelConfig],
+             shape: Optional[ShapeConfig], n_chips: int, *,
+             host_s: float = HOST_OVERHEAD_S) -> Roofline:
     """hlo: output of repro.core.hlo.analyze_hlo (PER-DEVICE module)."""
-    comp = hlo["flops"] / PEAK_FLOPS
-    mem = hlo["bytes"] / HBM_BW
-    # ring-model wire bytes when available; raw operand sum as fallback
-    coll = hlo.get("wire_bytes", hlo["collective_bytes"]) / ICI_BW
     mf = model_flops(cfg, shape) if cfg is not None else 0.0
-    hlo_total = hlo["flops"] * n_chips
-    useful = mf / hlo_total if hlo_total else 0.0
-    terms = {"compute": comp, "memory": mem, "collective": coll}
-    bound = max(terms, key=terms.get)
-    step = max(comp, mem, coll) + host_s
-    ideal = (mf / n_chips) / PEAK_FLOPS if n_chips else 0.0
-    return Roofline(
-        compute_s=comp, memory_s=mem, collective_s=coll,
-        model_flops=mf, hlo_flops=hlo_total, useful_ratio=useful,
-        bound=bound, step_s=step,
-        roofline_fraction=(ideal / step) if step else 0.0,
-        detail={"ideal_compute_s": ideal, "host_s": host_s,
-                "n_chips": n_chips})
-
-
-@dataclass
-class Breakdown:
-    """End-to-end phase breakdown (Fig 1 analogue)."""
-    accelerator_s: float
-    transfer_s: float
-    host_s: float
-    collective_s: float
-
-    @property
-    def total_s(self):
-        return (self.accelerator_s + self.transfer_s + self.host_s
-                + self.collective_s)
-
-    def fractions(self):
-        t = self.total_s or 1.0
-        return {"accelerator": self.accelerator_s / t,
-                "transfer": self.transfer_s / t,
-                "host": self.host_s / t,
-                "collective": self.collective_s / t}
+    return _engine_run(hlo, host_s=host_s, mf=mf, n_chips=n_chips).roofline
 
 
 def breakdown(hlo: Dict, *, host_prep_s: float = 0.0,
               serialize_transfers: bool = True) -> Breakdown:
     """Decompose the analyzed step into SMAUG's Fig-1 phases.
 
-    accelerator = compute-roofline time of the dots/convs;
-    transfer    = HBM traffic beyond the compute-resident working set;
-    collective  = ICI time; host = measured/modelled framework time.
-    When ``serialize_transfers`` (the DMA-like baseline) phases add up;
-    an optimized system overlaps them (the case studies quantify the gap).
-    """
-    accel = hlo["dot_flops"] / PEAK_FLOPS
-    other_flops = (hlo["flops"] - hlo["dot_flops"]) / PEAK_FLOPS
-    mem = hlo["bytes"] / HBM_BW
-    transfer = max(mem - accel, 0.0)
-    coll = hlo["collective_bytes"] / ICI_BW
-    return Breakdown(accelerator_s=accel + other_flops, transfer_s=transfer,
-                     host_s=host_prep_s + HOST_OVERHEAD_S,
-                     collective_s=coll)
+    accelerator = compute time of the step's flops; transfer = HBM traffic
+    beyond what the MXU stream hides behind the dots; collective = ICI time;
+    host = modelled framework time.  All four are aggregations of one engine
+    run's timeline (``serialize_transfers`` is kept for API compatibility —
+    the engine's "hbm" interface is the serialized baseline)."""
+    res = _engine_run(hlo, host_s=host_prep_s + HOST_OVERHEAD_S)
+    return res.breakdown
 
 
 def energy(hlo: Dict, seconds: float, n_chips: int = 1,

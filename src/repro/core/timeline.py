@@ -17,6 +17,7 @@ class Event:
     start: float
     duration: float
     kind: str = "compute"   # compute | transfer | host | collective | idle
+    phase: str = ""         # reporting group (falls back to name prefix)
 
     @property
     def end(self) -> float:
@@ -27,8 +28,8 @@ class Event:
 class Timeline:
     events: List[Event] = field(default_factory=list)
 
-    def add(self, worker, name, start, duration, kind="compute"):
-        self.events.append(Event(worker, name, start, duration, kind))
+    def add(self, worker, name, start, duration, kind="compute", phase=""):
+        self.events.append(Event(worker, name, start, duration, kind, phase))
 
     @property
     def makespan(self) -> float:
@@ -45,10 +46,12 @@ class Timeline:
         return busy / total if total else 0.0
 
     def per_kind(self) -> Dict[str, float]:
-        out: Dict[str, float] = {}
-        for e in self.events:
-            out[e.kind] = out.get(e.kind, 0.0) + e.duration
-        return out
+        from repro.sim.report import aggregate  # single aggregation home
+        return aggregate(self.events, "kind")
+
+    def per_phase(self) -> Dict[str, float]:
+        from repro.sim.report import aggregate
+        return aggregate(self.events, "phase")
 
     def to_chrome_trace(self) -> str:
         evs = [{"name": e.name, "ph": "X", "ts": e.start * 1e6,

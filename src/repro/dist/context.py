@@ -1,0 +1,84 @@
+"""Process-global distribution context: active mesh + performance flags.
+
+The launchers (``repro.launch.*``) install a mesh and a ``PerfFlags`` set
+before tracing; model code reads them through the accessors here so the same
+forward functions serve the baseline and every §Perf ablation without
+threading flags through call signatures.
+
+Everything defaults to "no mesh, baseline flags" so single-device tests and
+benchmarks need no setup.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, fields
+from typing import Optional, Tuple, Union
+
+
+@dataclass(frozen=True)
+class PerfFlags:
+    """Beyond-paper optimization switches (all default to baseline).
+
+    attn_remat_chunk      remat the online-softmax body (flash-style bwd)
+    windowed_attention    static sliding-window paths for local:global archs
+    seq_sharded_residual  Megatron-SP residual stream sharded over 'model'
+    bf16_tp_collectives   cast TP collectives to bf16 on the wire
+    ssm_impl              'scan' (recurrent) | 'chunked' (SSD-style blocks)
+    moe_dispatch          'gather' (index dispatch) | 'einsum' (one-hot)
+    """
+    attn_remat_chunk: bool = False
+    windowed_attention: bool = False
+    seq_sharded_residual: bool = False
+    bf16_tp_collectives: bool = False
+    ssm_impl: str = "scan"
+    moe_dispatch: str = "gather"
+
+    def __post_init__(self):
+        # CLI override strings ("ssm_impl=chunked", bare flags -> True) come
+        # through as str; normalize bool-typed fields.
+        for f in fields(self):
+            v = getattr(self, f.name)
+            if f.type == "bool" and isinstance(v, str):
+                object.__setattr__(
+                    self, f.name, v.lower() in ("1", "true", "yes", "on"))
+
+
+_STATE = {"mesh": None, "flags": PerfFlags()}
+
+
+def set_mesh(mesh) -> None:
+    """Install (or clear, with ``None``) the active device mesh."""
+    _STATE["mesh"] = mesh
+
+
+def get_mesh():
+    return _STATE["mesh"]
+
+
+def set_perf_flags(flags: PerfFlags) -> None:
+    _STATE["flags"] = flags
+
+
+def perf_flags() -> PerfFlags:
+    return _STATE["flags"]
+
+
+def mesh_axis_size(name: str) -> int:
+    """Size of a mesh axis; 1 when no mesh or the axis is absent."""
+    mesh = _STATE["mesh"]
+    if mesh is None:
+        return 1
+    try:
+        return int(dict(mesh.shape).get(name, 1))
+    except TypeError:
+        return 1
+
+
+def dp_axes() -> Optional[Union[str, Tuple[str, ...]]]:
+    """The data-parallel mesh axes (>1) in ('pod', 'data') order.
+
+    Returns a bare name, a tuple, or None — directly usable as a
+    PartitionSpec entry or a psum/pmean axis_name."""
+    axes = tuple(a for a in ("pod", "data") if mesh_axis_size(a) > 1)
+    if not axes:
+        return None
+    return axes[0] if len(axes) == 1 else axes

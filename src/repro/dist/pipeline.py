@@ -1,0 +1,64 @@
+"""GPipe-style pipeline parallelism over a 'stage' mesh axis.
+
+``pipeline_apply`` runs S identical stages on S devices with M microbatches
+in flight: stage 0 ingests a new microbatch every tick, activations rotate
+stage->stage+1 via collective_permute, and the last stage emits a finished
+microbatch per tick once the pipeline fills (total ticks = M + S - 1).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.compat import shard_map
+
+
+def pipeline_apply(mesh, stage_fn, stage_params, x, n_microbatches: int):
+    """Apply ``stage_fn(w, x)`` for each of S pipeline stages.
+
+    stage_params: pytree with a leading stage dimension S (sharded over
+    'stage'); x: (B, ...) global batch, B divisible by n_microbatches.
+    Returns stage_fn applied S times in sequence, computed pipelined.
+    """
+    n_stages = int(dict(mesh.shape)["stage"])
+    B = x.shape[0]
+    assert B % n_microbatches == 0, (B, n_microbatches)
+    mb = B // n_microbatches
+    xs = x.reshape(n_microbatches, mb, *x.shape[1:])
+    rotate = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+
+    def body(w, xs):
+        w = jax.tree_util.tree_map(lambda t: t[0], w)  # local stage params
+        stage = jax.lax.axis_index("stage")
+        is_first = stage == 0
+        is_last = stage == n_stages - 1
+        buf = jnp.zeros(xs.shape[1:], xs.dtype)
+        outs = jnp.zeros_like(xs)
+
+        def tick(t, carry):
+            buf, outs = carry
+            # stage 0 ingests microbatch t; later stages consume the rotated
+            # activation produced one tick earlier by their predecessor
+            inp = jnp.where(is_first,
+                            xs[jnp.clip(t, 0, n_microbatches - 1)], buf)
+            y = stage_fn(w, inp)
+            # the last stage drains microbatch t-(S-1) once the pipe is full
+            j = t - (n_stages - 1)
+            take = is_last & (j >= 0)
+            outs = jnp.where(
+                take,
+                outs.at[jnp.clip(j, 0, n_microbatches - 1)].set(y),
+                outs)
+            buf = jax.lax.ppermute(y, "stage", rotate)
+            return buf, outs
+
+        _, outs = jax.lax.fori_loop(0, n_microbatches + n_stages - 1, tick,
+                                    (buf, outs))
+        # replicate the drained result (resident on the last stage) to all
+        return jax.lax.psum(jnp.where(is_last, outs, 0.0), "stage")
+
+    out = shard_map(body, mesh=mesh,
+                    in_specs=(P("stage"), P()),
+                    out_specs=P())(stage_params, xs)
+    return out.reshape(B, *x.shape[1:])

@@ -162,11 +162,11 @@ def moe_apply(p, x, cfg: ModelConfig):
                 rz = jax.lax.pmean(rz, dp)
             return out.reshape(xl.shape), lb, rz
 
-        out, lb, rz = jax.shard_map(
+        from repro.core.compat import shard_map
+        out, lb, rz = shard_map(
             inner, mesh=mesh,
             in_specs=(xspec, P(None, None), espec, espec, espec),
             out_specs=(xspec, P(), P()),
-            check_vma=False,
         )(x, p["router"], p["gate"][None], p["up"][None], p["down"][None])
         aux = {"load_balance": lb, "router_z": rz}
     else:

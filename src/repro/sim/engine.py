@@ -1,0 +1,291 @@
+"""Event-driven executor: one simulated execution -> every paper metric.
+
+``run(program, config)`` schedules ``CostedOp``s over N accelerator workers:
+
+  * every producer->consumer tensor is staged through a pluggable interface
+    model ("hbm" bare round-trip, "dma" software-managed staging,
+    "acp" fused/VMEM-resident, "ideal" free) — the Fig 11 study is just two
+    runs of the same program;
+  * concurrent transfers contend for a fixed number of HBM ports (effective
+    bandwidth divides once active transfers exceed ports — this replaces
+    the old ad-hoc ``shared_bw_penalty`` scaling);
+  * each dispatch charges serial host/framework time (per-op launch cost
+    plus a host-bandwidth tiling term divided over host threads — the
+    Fig 15/16 multithreading study);
+  * reduction-affinity ops pin to one worker queue (Fig 14);
+  * collective traffic serializes on the ICI lane.
+
+The result carries the Timeline, the Fig-1 Breakdown, the Roofline terms and
+the energy estimate of the *same* run.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.core.energy import DEFAULT_ENERGY, EnergyModel
+from repro.core.timeline import Timeline
+from repro.sim import hw, report
+from repro.sim.ir import CostedOp, Program
+
+
+# ---------------------------------------------------------------------------
+# interface models (seconds, joules) for staging ``nbytes`` between ops
+
+
+def _iface_hbm(nbytes: float, cfg: "EngineConfig") -> Tuple[float, float]:
+    """Bare HBM traffic at full bandwidth — the roofline memory model."""
+    return nbytes / cfg.hbm_bw, cfg.energy.hbm(nbytes)
+
+
+def _iface_dma(nbytes: float, cfg: "EngineConfig") -> Tuple[float, float]:
+    from repro.core.interfaces import dma_transfer
+    n = max(1, int(nbytes // cfg.dma_transfer_bytes))
+    c = dma_transfer(nbytes, n_transfers=n, em=cfg.energy,
+                     hbm_bw=cfg.hbm_bw)
+    return c.seconds, c.energy_j
+
+
+def _iface_acp(nbytes: float, cfg: "EngineConfig") -> Tuple[float, float]:
+    from repro.core.interfaces import acp_transfer
+    resident = 1.0 if nbytes < cfg.vmem_resident_bytes else 0.5
+    c = acp_transfer(nbytes, resident_fraction=resident, em=cfg.energy,
+                     hbm_bw=cfg.hbm_bw, vmem_bw=cfg.vmem_bw)
+    return c.seconds, c.energy_j
+
+
+def _iface_ideal(nbytes: float, cfg: "EngineConfig") -> Tuple[float, float]:
+    return 0.0, 0.0
+
+
+INTERFACES: Dict[str, Callable] = {
+    "hbm": _iface_hbm, "dma": _iface_dma, "acp": _iface_acp,
+    "ideal": _iface_ideal,
+}
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    n_workers: int = 1
+    interface: str = "hbm"            # hbm | dma | acp | ideal
+    peak_flops: float = hw.PEAK_FLOPS
+    hbm_bw: float = hw.HBM_BW
+    vmem_bw: float = hw.VMEM_BW
+    ici_bw: float = hw.ICI_BW
+    # HBM-port contention: active transfers beyond this many share bandwidth
+    # (0 = one port per worker, i.e. no contention; fractional values allow
+    # exact translation of the legacy shared_bw_penalty)
+    hbm_ports: float = 0
+    # host/framework model: serial per-dispatch launch cost + a tiling term
+    # (bytes over host_bw) divided across host worker threads
+    host_dispatch_s: float = 0.0
+    host_bw: float = 0.0              # 0 = no per-byte host cost
+    host_threads: int = 1
+    host_floor_s: float = 0.0         # per-run framework floor (Fig 1 host)
+    # transfer/compute overlap: the MXU double-buffers its operand traffic,
+    # so only memory time beyond the dot compute is exposed; the DMA path
+    # serializes (SW-managed staging completes before compute starts)
+    overlap_transfers: Optional[bool] = None   # None -> interface != "dma"
+    # scales the accelerator's local datapath (scratchpad/VMEM port width):
+    # a half-size PE array also halves its feed bandwidth (Fig 20 sweep)
+    datapath_scale: float = 1.0
+    vmem_resident_bytes: float = 32 * 1024 * 1024
+    dma_transfer_bytes: float = 64 * 1024
+    energy: EnergyModel = DEFAULT_ENERGY
+    n_chips: int = 1
+
+    @property
+    def overlap(self) -> bool:
+        if self.overlap_transfers is None:
+            return self.interface != "dma"
+        return self.overlap_transfers
+
+
+@dataclass
+class EngineResult:
+    timeline: Timeline
+    program: Program
+    config: EngineConfig
+    breakdown: report.Breakdown
+    roofline: report.Roofline
+    energy: Dict[str, float]
+    makespan: float
+
+    @property
+    def per_kind(self) -> Dict[str, float]:
+        return report.aggregate(self.timeline.events, "kind")
+
+    @property
+    def per_phase(self) -> Dict[str, float]:
+        return report.aggregate(self.timeline.events, "phase")
+
+    def utilization(self, worker: Optional[str] = None) -> float:
+        """Accelerator-worker utilization (the host and ICI lanes are
+        resources, not workers — they don't dilute the denominator)."""
+        if worker is not None:
+            return self.timeline.utilization(worker)
+        evs = [e for e in self.timeline.events
+               if e.worker.startswith("acc") and e.kind != "idle"]
+        workers = {e.worker for e in evs}
+        total = self.timeline.makespan * max(len(workers), 1)
+        return sum(e.duration for e in evs) / total if total else 0.0
+
+
+# ---------------------------------------------------------------------------
+# the executor
+
+
+def run(program: Program, config: EngineConfig = EngineConfig(), *,
+        model_flops: float = 0.0, host_s: Optional[float] = None
+        ) -> EngineResult:
+    """Simulate ``program`` on ``config``; returns every metric of the run.
+
+    ``host_s``: roofline host floor (defaults to ``config.host_floor_s``).
+    """
+    if config.interface not in INTERFACES:
+        raise ValueError(f"unknown interface {config.interface!r}; "
+                         f"one of {sorted(INTERFACES)}")
+    iface = INTERFACES[config.interface]
+    tl = Timeline()
+    n = max(config.n_workers, 1)
+    avail = [0.0] * n
+    affinity_worker: Dict[str, int] = {}
+    done: Dict[str, float] = {}
+    host_free = 0.0
+    ici_free = 0.0
+    transfers: List[Tuple[float, float]] = []   # active (start, end) windows
+    transfer_energy = 0.0
+    iface_time_total = [0.0]    # full interface seconds charged this run
+
+    # dependency bookkeeping
+    ops = {op.name: op for op in program.ops}
+    n_waiting = {op.name: sum(1 for d in op.deps if d in ops)
+                 for op in program.ops}
+    consumers: Dict[str, List[str]] = {}
+    for op in program.ops:
+        for d in op.deps:
+            if d in ops:
+                consumers.setdefault(d, []).append(op.name)
+    ready = [op.name for op in program.ops if n_waiting[op.name] == 0]
+    if not ready and program.ops:
+        raise ValueError("dependency cycle in program")
+    scheduled = 0
+
+    def op_compute_s(op: CostedOp) -> float:
+        if op.duration_s is not None:
+            return op.duration_s
+        return op.flops / config.peak_flops
+
+    def op_transfer_base(op: CostedOp) -> Tuple[float, float, float]:
+        """(full seconds, exposed seconds, energy) for this op's staging.
+
+        ``full`` is the interface time at nominal bandwidth; ``exposed`` is
+        what the worker actually stalls on — in overlap mode the MXU stream
+        hides operand traffic behind the op's dot compute."""
+        if op.transfer_s is not None:
+            return op.transfer_s, op.transfer_s, config.energy.hbm(
+                op.transfer_s * config.hbm_bw)
+        if not op.bytes:
+            return 0.0, 0.0, 0.0
+        t, e = iface(op.bytes, config)
+        t /= config.datapath_scale
+        exposed = (max(t - op.dot_flops / config.peak_flops, 0.0)
+                   if config.overlap else t)
+        return t, exposed, e
+
+    def contention_factor(start: float) -> float:
+        if config.hbm_ports <= 0:
+            return 1.0
+        live = 1 + sum(1 for (s, e) in transfers if s <= start < e)
+        return max(1.0, live / config.hbm_ports)
+
+    while ready:
+        # LPT among currently-ready ops (the legacy scheduler heuristic)
+        ready.sort(key=lambda nm: -op_compute_s(ops[nm]))
+        batch, ready = ready, []
+        for nm in batch:
+            op = ops[nm]
+            if op.affinity is not None and op.affinity in affinity_worker:
+                w = affinity_worker[op.affinity]
+            else:
+                w = min(range(n), key=lambda i: avail[i])
+                if op.affinity is not None:
+                    affinity_worker[op.affinity] = w
+            dep_ready = max((done[d] for d in op.deps if d in done),
+                            default=0.0)
+            t = max(avail[w], dep_ready)
+            # serial host dispatch (framework time) gates the launch
+            host_cost = (config.host_dispatch_s
+                         + (op.bytes / config.host_bw / config.host_threads
+                            if config.host_bw else 0.0))
+            if host_cost > 0.0:
+                h0 = max(host_free, dep_ready)
+                tl.add("host", f"{op.name}:dispatch", h0, host_cost, "host",
+                       phase=op.phase)
+                host_free = h0 + host_cost
+                t = max(t, host_free)
+            # staged input transfer, with HBM-port contention
+            full, xfer, xe = op_transfer_base(op)
+            transfer_energy += xe
+            if xfer > 0.0:
+                factor = contention_factor(t)
+                xfer *= factor
+                tl.add(f"acc{w}", f"{op.name}:xfer", t, xfer, "transfer",
+                       phase=op.phase)
+                transfers.append((t, t + xfer))
+                iface_time_total[0] += full * factor
+                t += xfer
+            else:
+                iface_time_total[0] += full
+            comp = op_compute_s(op)
+            tl.add(f"acc{w}", op.name, t, comp, "compute", phase=op.phase)
+            t += comp
+            avail[w] = t
+            # collective traffic serializes on the ICI lane (operand-sum
+            # metric, matching the closed-form breakdown; the ring-model
+            # wire bytes feed the roofline collective term instead)
+            if op.collective_bytes > 0.0:
+                c0 = max(ici_free, t)
+                cdur = op.collective_bytes / config.ici_bw
+                tl.add("ici", f"{op.name}:coll", c0, cdur, "collective",
+                       phase=op.phase)
+                ici_free = c0 + cdur
+                t = c0 + cdur
+            done[nm] = t
+            scheduled += 1
+            for cn in consumers.get(nm, ()):
+                n_waiting[cn] -= 1
+                if n_waiting[cn] == 0:
+                    ready.append(cn)
+    if scheduled != len(program.ops):
+        raise ValueError("dependency cycle in program")
+
+    host_floor = config.host_floor_s if host_s is None else host_s
+    makespan = tl.makespan
+    totals = program.totals()
+    bd = report.breakdown_from_events(tl.events, host_floor_s=host_floor)
+    if config.overlap:
+        # the Fig-1 transfer phase applies the dot-hiding budget at the
+        # aggregate level (like the closed form): memory time beyond the
+        # program's total MXU time is exposed.  The timeline keeps the
+        # per-op view; per-op exposure can only exceed this (Jensen).
+        bd.transfer_s = max(
+            iface_time_total[0] - totals["dot_flops"] / config.peak_flops,
+            0.0)
+    rl = report.roofline_from_totals(
+        totals, host_s=host_floor, n_chips=config.n_chips,
+        model_flops=model_flops, peak_flops=config.peak_flops,
+        hbm_bw=config.hbm_bw, ici_bw=config.ici_bw)
+    e_comp = config.energy.compute(totals["flops"])
+    e_ici = config.energy.ici(totals["collective_bytes"])
+    e_static = config.energy.static(makespan + host_floor, 1)
+    energy = {
+        "compute_j": e_comp, "hbm_j": transfer_energy, "ici_j": e_ici,
+        "static_j": e_static,
+        "total_j": e_comp + transfer_energy + e_ici + e_static,
+        "total_j_all_chips": (e_comp + transfer_energy + e_ici + e_static)
+        * config.n_chips,
+    }
+    return EngineResult(timeline=tl, program=program, config=config,
+                        breakdown=bd, roofline=rl, energy=energy,
+                        makespan=makespan)

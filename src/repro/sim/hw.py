@@ -1,0 +1,12 @@
+"""Hardware constants shared by every cost path (TPU v5e, per assignment).
+
+Single home for the numbers that used to be re-declared across
+``core/simulator.py``, ``core/interfaces.py`` and ``core/tiling.py``;
+those modules re-export them for backward compatibility.
+"""
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+VMEM_BW = 11e12              # effective on-chip bandwidth
+HOST_OVERHEAD_S = 50e-6      # per-step launch/framework floor (host runtime)

@@ -1,0 +1,230 @@
+"""CostedOp IR — the single currency of the simulation engine.
+
+A ``CostedOp`` carries everything the executor needs to place it in time:
+compute (flops, with the dot/MXU share split out), data movement (operand
+and result bytes, routed through the pluggable interface model), collective
+traffic (assignment-metric operand bytes plus ring-model wire bytes),
+scheduling structure (deps, reduction affinity), and a reporting phase.
+
+Three lowerings produce ``Program``s:
+
+  from_graph  the declarative ``repro.core.graph.Graph`` -> tile-level ops
+              via the dataflow tiling optimizer (replaces the old
+              ``graph.tile_tasks`` / ``graph_ops.node_cost`` path),
+  from_hlo    an ``analyze_hlo`` cost dict -> a chain of uniform macro-ops
+              that preserves every aggregate exactly (the compiled module is
+              already fused; per-instruction structure is gone),
+  from_tasks  legacy ``TileTask`` lists (scheduler compat).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Dict, List, Optional, Sequence, Tuple
+
+BYTES_PER_ELEM = 4  # graph tensors are fp32
+
+
+@dataclass(frozen=True)
+class CostedOp:
+    name: str
+    flops: float = 0.0
+    dot_flops: float = 0.0          # MXU share (can hide memory traffic)
+    bytes_in: float = 0.0           # operand bytes staged producer->consumer
+    bytes_out: float = 0.0          # result bytes
+    collective_bytes: float = 0.0   # operand-sum metric
+    wire_bytes: float = 0.0         # ring-model per-device wire bytes
+    transcendentals: float = 0.0
+    deps: Tuple[str, ...] = ()
+    affinity: Optional[str] = None  # same key -> same worker queue
+    phase: str = ""                 # reporting group (layer / figure phase)
+    # explicit-time overrides (legacy TileTask lowering; None = derive from
+    # flops/bytes and the engine's hardware model)
+    duration_s: Optional[float] = None
+    transfer_s: Optional[float] = None
+
+    @property
+    def bytes(self) -> float:
+        return self.bytes_in + self.bytes_out
+
+
+@dataclass
+class Program:
+    ops: List[CostedOp]
+    name: str = ""
+    source: str = ""                # graph | hlo | tasks | custom
+    meta: Dict = field(default_factory=dict)
+
+    def __len__(self):
+        return len(self.ops)
+
+    # -- aggregates (the roofline inputs; preserved exactly by lowerings) ---
+    def total(self, attr: str) -> float:
+        return sum(getattr(op, attr) for op in self.ops)
+
+    def totals(self) -> Dict[str, float]:
+        return {k: self.total(k) for k in
+                ("flops", "dot_flops", "bytes_in", "bytes_out",
+                 "collective_bytes", "wire_bytes", "transcendentals")}
+
+    def as_hlo_dict(self) -> Dict[str, float]:
+        """Aggregate cost dict in the ``analyze_hlo`` schema — feeding this
+        back to the closed-form wrappers reproduces the engine's terms."""
+        t = self.totals()
+        return {"flops": t["flops"], "dot_flops": t["dot_flops"],
+                "bytes": t["bytes_in"] + t["bytes_out"],
+                "collective_bytes": t["collective_bytes"],
+                "wire_bytes": t["wire_bytes"],
+                "transcendentals": t["transcendentals"],
+                "collectives": {}, "n_while": 0, "custom_calls": {}}
+
+    def then(self, other: "Program", name: str = "") -> "Program":
+        """Sequential composition: ``other`` starts after this program's
+        sinks complete (every root of ``other`` gains deps on our sinks)."""
+        if not self.ops or not other.ops:
+            return Program(self.ops + other.ops, name or self.name,
+                           self.source)
+        consumed = {d for op in self.ops for d in op.deps}
+        sinks = tuple(op.name for op in self.ops if op.name not in consumed)
+        other_names = {op.name for op in other.ops}
+        bridged = [
+            replace(op, deps=tuple(op.deps) + sinks)
+            if not any(d in other_names for d in op.deps) else op
+            for op in other.ops]
+        return Program(self.ops + bridged,
+                       name or f"{self.name}+{other.name}", "custom")
+
+
+# ---------------------------------------------------------------------------
+# lowering 1: declarative graph -> tile-level program
+
+
+def _node_cost_parts(g, n, batch: int) -> Tuple[float, float, float]:
+    """(flops, bytes_in, bytes_out) of one graph node at the given batch."""
+    import numpy as np
+    elems_out = int(np.prod(n.shape)) * batch // max(n.shape[0], 1)
+    bytes_out = BYTES_PER_ELEM * elems_out
+    if n.op == "convolution":
+        k = n.attrs.get("kernel", 3)
+        cin = n.attrs.get("cin", n.shape[-1])
+        flops = 2.0 * elems_out * k * k * cin
+        return flops, bytes_out, bytes_out        # act in ~ act out (same HW)
+    if n.op == "matmul":
+        cin = n.attrs.get("cin", n.shape[-1])
+        flops = 2.0 * elems_out * cin
+        bytes_in = BYTES_PER_ELEM * (elems_out + cin * n.shape[-1])
+        return flops, bytes_in, bytes_out
+    return float(elems_out), bytes_out, bytes_out  # elementwise / pool / norm
+
+
+def from_graph(g, batch: int = 1, max_tile_elems: int = 16384) -> Program:
+    """Lower a ``repro.core.graph.Graph`` to a tile-level Program.
+
+    Each op is tiled by the dataflow tiling optimizer; tile *i* of a node
+    depends on tile *i* of each producer (wavefront pipelining — consumers
+    start as soon as the matching producer tile lands).  Convolution tiles
+    that cut the reduction dim share an affinity key: their partial sums
+    reduce in place on one worker queue (the paper's Fig 14 effect).
+    """
+    import numpy as np
+
+    from repro.core.tensor import TensorSpec
+    from repro.core.tiling import choose_tiling
+
+    ops: List[CostedOp] = []
+    n_tiles_of: Dict[str, int] = {}
+    for name in g.order:
+        n = g.nodes[name]
+        if n.op in ("input", "weight"):
+            continue
+        # resolve real kernel/cin from the weight operand when present
+        if n.op in ("convolution", "matmul") and len(n.inputs) > 1:
+            wshape = g.nodes[n.inputs[1]].shape
+            if n.op == "convolution":
+                n.attrs.setdefault("kernel", wshape[0])
+                n.attrs.setdefault("cin", wshape[2])
+            else:
+                n.attrs.setdefault("cin", wshape[0])
+        flops, bytes_in, bytes_out = _node_cost_parts(g, n, batch)
+        shape4 = tuple(n.shape) if len(n.shape) == 4 else \
+            (1, 1, 1, int(np.prod(n.shape)))
+        tiling = choose_tiling(
+            TensorSpec(shape4, "NHWC", "float32"), max_tile_elems,
+            reduce_dim="C" if n.op in ("convolution", "matmul") else None)
+        n_tiles = max(tiling.n_tiles, 1)
+        n_tiles_of[name] = n_tiles
+        reduce_aff = "C" in tiling.strategy and n.op == "convolution"
+        producers = [d for d in n.inputs
+                     if d in g.nodes and g.nodes[d].op not in
+                     ("input", "weight")]
+        for i in range(n_tiles):
+            deps = tuple(
+                f"{d}/t{min(i, n_tiles_of.get(d, 1) - 1)}"
+                for d in producers)
+            ops.append(CostedOp(
+                name=f"{name}/t{i}",
+                flops=flops / n_tiles,
+                dot_flops=(flops / n_tiles
+                           if n.op in ("convolution", "matmul") else 0.0),
+                bytes_in=bytes_in / n_tiles,
+                bytes_out=bytes_out / n_tiles,
+                deps=deps,
+                affinity=(name if reduce_aff else None),
+                phase=name))
+    return Program(ops, name=g.name, source="graph",
+                   meta={"batch": batch, "max_tile_elems": max_tile_elems})
+
+
+# ---------------------------------------------------------------------------
+# lowering 2: analyzed compiled HLO -> macro-op chain
+
+
+def from_hlo(hlo: Dict, n_ops: int = 8, name: str = "") -> Program:
+    """Lower an ``analyze_hlo`` cost dict to a chain of uniform macro-ops.
+
+    The compiled module is one fused step — per-instruction structure is not
+    recoverable from the aggregate dict — so the program is ``n_ops``
+    proportional slices executed in sequence.  All aggregates (flops, bytes,
+    collective/wire bytes) are preserved exactly, so the engine's roofline
+    and breakdown equal the closed-form values by construction.
+    """
+    n_ops = max(int(n_ops), 1)
+    flops = float(hlo.get("flops", 0.0))
+    dot = float(hlo.get("dot_flops", 0.0))
+    nbytes = float(hlo.get("bytes", 0.0))
+    coll = float(hlo.get("collective_bytes", 0.0))
+    # ring-model wire bytes when the analyzer produced them; the raw operand
+    # sum is the fallback ONLY when the key is absent (hand-written dicts) —
+    # a legitimate 0.0 (e.g. group-size-1 collectives) must stay 0.0
+    wire = float(hlo["wire_bytes"]) if "wire_bytes" in hlo else coll
+    trans = float(hlo.get("transcendentals", 0.0))
+    ops = []
+    for i in range(n_ops):
+        ops.append(CostedOp(
+            name=f"step/{i}",
+            flops=flops / n_ops,
+            dot_flops=dot / n_ops,
+            bytes_in=0.5 * nbytes / n_ops,
+            bytes_out=0.5 * nbytes / n_ops,
+            collective_bytes=coll / n_ops,
+            wire_bytes=wire / n_ops,
+            transcendentals=trans / n_ops,
+            deps=(f"step/{i-1}",) if i else (),
+            phase="step"))
+    return Program(ops, name=name or hlo.get("entry", "hlo"), source="hlo",
+                   meta={"n_ops": n_ops})
+
+
+# ---------------------------------------------------------------------------
+# lowering 3: legacy TileTask lists (scheduler compat)
+
+
+def from_tasks(tasks: Sequence, name: str = "tasks") -> Program:
+    """Lower ``core.scheduler.TileTask``s, preserving their explicit times."""
+    ops = [CostedOp(name=t.name,
+                    duration_s=float(t.duration),
+                    transfer_s=float(t.transfer) if t.transfer else 0.0,
+                    deps=tuple(t.deps),
+                    affinity=t.affinity,
+                    phase=t.name.split("/")[0])
+           for t in tasks]
+    return Program(ops, name=name, source="tasks")

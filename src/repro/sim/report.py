@@ -1,0 +1,131 @@
+"""Shared reporting layer: the result dataclasses every figure reads, and
+the per-kind / per-phase aggregations previously duplicated across
+``core/simulator.py``, ``core/timeline.py`` and the benchmarks.
+
+``Breakdown`` and ``Roofline`` live here (and are re-exported by
+``repro.core.simulator`` for API stability) so the engine, the closed-form
+wrappers, and the benchmarks all speak the same types.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, Optional
+
+from repro.sim.hw import HOST_OVERHEAD_S, PEAK_FLOPS
+
+
+@dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float
+    hlo_flops: float
+    useful_ratio: float
+    bound: str
+    step_s: float                # max of terms (+ host floor)
+    roofline_fraction: float     # ideal compute_s / step_s
+    detail: Dict = field(default_factory=dict)
+
+    def to_dict(self):
+        return {
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "model_flops": self.model_flops, "hlo_flops": self.hlo_flops,
+            "useful_ratio": self.useful_ratio, "bound": self.bound,
+            "step_s": self.step_s,
+            "roofline_fraction": self.roofline_fraction,
+            **self.detail,
+        }
+
+
+@dataclass
+class Breakdown:
+    """End-to-end phase breakdown (Fig 1 analogue)."""
+    accelerator_s: float
+    transfer_s: float
+    host_s: float
+    collective_s: float
+
+    @property
+    def total_s(self):
+        return (self.accelerator_s + self.transfer_s + self.host_s
+                + self.collective_s)
+
+    def fractions(self):
+        t = self.total_s or 1.0
+        return {"accelerator": self.accelerator_s / t,
+                "transfer": self.transfer_s / t,
+                "host": self.host_s / t,
+                "collective": self.collective_s / t}
+
+
+# ---------------------------------------------------------------------------
+# aggregations over timeline events
+
+
+def aggregate(events: Iterable, key: str = "kind") -> Dict[str, float]:
+    """Sum event durations grouped by an event attribute (kind/worker/phase
+    — phase uses the event's phase tag, else the op-name prefix)."""
+    out: Dict[str, float] = {}
+    for e in events:
+        if key == "phase":
+            k = getattr(e, "phase", "") or e.name.split("/")[0]
+        else:
+            k = getattr(e, key)
+        out[k] = out.get(k, 0.0) + e.duration
+    return out
+
+
+def breakdown_from_events(events: Iterable,
+                          host_floor_s: float = 0.0) -> Breakdown:
+    """Fig-1 breakdown as pure aggregation of a simulated timeline."""
+    kinds = aggregate(events, "kind")
+    return Breakdown(
+        accelerator_s=kinds.get("compute", 0.0),
+        transfer_s=kinds.get("transfer", 0.0),
+        host_s=kinds.get("host", 0.0) + host_floor_s,
+        collective_s=kinds.get("collective", 0.0))
+
+
+def roofline_from_totals(totals: Dict[str, float], *, host_s: float,
+                         n_chips: int = 1, model_flops: float = 0.0,
+                         peak_flops: float = PEAK_FLOPS,
+                         hbm_bw: float = None, ici_bw: float = None
+                         ) -> Roofline:
+    """Roofline object from program aggregates (identical to the legacy
+    closed form: the terms are per-device sums over the same op set)."""
+    from repro.sim import hw
+    hbm_bw = hbm_bw or hw.HBM_BW
+    ici_bw = ici_bw or hw.ICI_BW
+    comp = totals["flops"] / peak_flops
+    mem = (totals["bytes_in"] + totals["bytes_out"]) / hbm_bw
+    # lowerings resolve the wire-vs-operand-sum choice; use wire as-is
+    coll = totals.get("wire_bytes", 0.0) / ici_bw
+    terms = {"compute": comp, "memory": mem, "collective": coll}
+    bound = max(terms, key=terms.get)
+    step = max(comp, mem, coll) + host_s
+    hlo_total = totals["flops"] * n_chips
+    ideal = (model_flops / n_chips) / peak_flops if n_chips else 0.0
+    return Roofline(
+        compute_s=comp, memory_s=mem, collective_s=coll,
+        model_flops=model_flops, hlo_flops=hlo_total,
+        useful_ratio=(model_flops / hlo_total) if hlo_total else 0.0,
+        bound=bound, step_s=step,
+        roofline_fraction=(ideal / step) if step else 0.0,
+        detail={"ideal_compute_s": ideal, "host_s": host_s,
+                "n_chips": n_chips})
+
+
+def row(name: str, seconds: float, derived: str) -> Dict[str, object]:
+    """The ``name,us_per_call,derived`` CSV convention of benchmarks/run.py."""
+    return {"name": name, "us_per_call": round(seconds * 1e6, 1),
+            "derived": derived}
+
+
+def fractions_str(b: Breakdown) -> str:
+    f = b.fractions()
+    return (f"accel={f['accelerator']*100:.0f}% "
+            f"transfer={f['transfer']*100:.0f}% "
+            f"host={f['host']*100:.0f}% "
+            f"coll={f['collective']*100:.0f}%")

@@ -26,8 +26,7 @@ def test_checkpoint_roundtrips_across_meshes(tmp_path):
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.ckpt import save_checkpoint
-        mesh = jax.make_mesh((2, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = jax.make_mesh((2, 2), ("data", "model"))
         w = jnp.arange(64, dtype=jnp.float32).reshape(8, 8)
         w = jax.device_put(w, NamedSharding(mesh, P("data", "model")))
         save_checkpoint("{tmp_path}", 5, {{"w": w}})
@@ -38,8 +37,7 @@ def test_checkpoint_roundtrips_across_meshes(tmp_path):
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.ckpt import load_checkpoint
         # DIFFERENT topology: 8-way data-parallel only (elastic re-mesh)
-        mesh = jax.make_mesh((8, 1), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = jax.make_mesh((8, 1), ("data", "model"))
         t = {{"w": jnp.zeros((8, 8), jnp.float32)}}
         sh = {{"w": NamedSharding(mesh, P("data", None))}}
         out = load_checkpoint("{tmp_path}", template=t, shardings=sh)

@@ -24,8 +24,7 @@ def test_gpipe_matches_sequential():
     out = _run("""
         import jax, jax.numpy as jnp, numpy as np
         from repro.dist.pipeline import pipeline_apply
-        mesh = jax.make_mesh((4,), ("stage",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = jax.make_mesh((4,), ("stage",))
         S, B, D = 4, 8, 16
         ws = jax.random.normal(jax.random.PRNGKey(0), (S, D, D)) * 0.3
         x = jax.random.normal(jax.random.PRNGKey(1), (B, D))
@@ -59,8 +58,7 @@ def test_moe_ep_matches_single_device():
         x = jax.random.normal(jax.random.PRNGKey(1), (4, 8, cfg.d_model)
                               ).astype(jnp.bfloat16)
         ref, _ = M.moe_apply(p, x, cfg)                    # no mesh
-        mesh = jax.make_mesh((2, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = jax.make_mesh((2, 2), ("data", "model"))
         dist_ctx.set_mesh(mesh)
         out, _ = jax.jit(lambda p, x: M.moe_apply(p, x, cfg))(p, x)
         dist_ctx.set_mesh(None)

@@ -1,5 +1,5 @@
 """Sampled-simulation (loop tree) tests — §II-E1 analogue."""
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core.sampling import (LoopNode, measure_sampled, sampling_error,
                                  unsample)

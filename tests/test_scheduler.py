@@ -2,7 +2,7 @@
 import threading
 import time
 
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core.scheduler import ThreadPool, TileTask, simulate
 

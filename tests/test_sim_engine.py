@@ -1,0 +1,207 @@
+"""Unified simulation engine: one run yields Timeline + Breakdown +
+Roofline + energy, and the engine-derived values match the closed-form
+``roofline()``/``breakdown()`` wrappers (acceptance: within 5%; in practice
+exact for HLO programs)."""
+import math
+
+import pytest
+
+from repro.configs.paper_nets import PAPER_NETS
+from repro.core.simulator import (HBM_BW, HOST_OVERHEAD_S, ICI_BW,
+                                  PEAK_FLOPS, breakdown, roofline)
+from repro.apps.paper_graphs import build_paper_graph
+from repro.sim import engine, ir
+
+HLO = {"flops": 1e15, "dot_flops": 9e14, "bytes": 1e12,
+       "collective_bytes": 1e10, "wire_bytes": 1.5e10,
+       "transcendentals": 1e9, "collectives": {}, "n_while": 1,
+       "custom_calls": {}}
+
+
+# ---------------------------------------------------------------------------
+# IR lowerings
+
+
+def test_from_hlo_preserves_aggregates_exactly():
+    prog = ir.from_hlo(HLO, n_ops=8)
+    t = prog.totals()
+    assert t["flops"] == pytest.approx(HLO["flops"], rel=1e-12)
+    assert t["dot_flops"] == pytest.approx(HLO["dot_flops"], rel=1e-12)
+    assert t["bytes_in"] + t["bytes_out"] == pytest.approx(HLO["bytes"],
+                                                           rel=1e-12)
+    assert t["collective_bytes"] == pytest.approx(HLO["collective_bytes"],
+                                                  rel=1e-12)
+    assert t["wire_bytes"] == pytest.approx(HLO["wire_bytes"], rel=1e-12)
+    back = prog.as_hlo_dict()
+    assert back["bytes"] == pytest.approx(HLO["bytes"], rel=1e-12)
+
+
+def test_from_graph_lowers_every_node():
+    g = build_paper_graph(PAPER_NETS["lenet5"], batch=1)
+    prog = ir.from_graph(g, batch=1, max_tile_elems=16384)
+    compute_nodes = [n for n in g.nodes.values()
+                     if n.op not in ("input", "weight")]
+    phases = {op.phase for op in prog.ops}
+    assert phases == {n.name for n in compute_nodes}
+    assert prog.total("flops") > 0
+    assert prog.total("bytes_in") > 0
+    # wavefront deps stay inside the program
+    names = {op.name for op in prog.ops}
+    for op in prog.ops:
+        assert all(d in names for d in op.deps)
+
+
+def test_program_then_bridges_every_root():
+    a = ir.Program([ir.CostedOp("a0", duration_s=1e-3),
+                    ir.CostedOp("a1", deps=("a0",), duration_s=1e-3)],
+                   name="a")
+    # b has TWO roots; both must wait for a's sinks
+    b = ir.Program([ir.CostedOp("b0", duration_s=1e-3),
+                    ir.CostedOp("b1", duration_s=1e-3),
+                    ir.CostedOp("b2", deps=("b0", "b1"), duration_s=1e-3)],
+                   name="b")
+    c = a.then(b)
+    by_name = {op.name: op for op in c.ops}
+    assert "a1" in by_name["b0"].deps
+    assert "a1" in by_name["b1"].deps
+    assert "a1" not in by_name["b2"].deps    # non-root keeps its own deps
+    res = engine.run(c, engine.EngineConfig(n_workers=4))
+    order = {e.name: e.start for e in res.timeline.events
+             if e.kind == "compute"}
+    assert order["b0"] >= order["a1"]
+    assert order["b1"] >= order["a1"]
+
+
+def test_wire_bytes_zero_key_not_overridden():
+    """A present-but-zero wire_bytes (group-size-1 collectives) must NOT
+    fall back to the operand-sum metric — only an absent key does."""
+    zero_wire = dict(HLO, wire_bytes=0.0)
+    rl = roofline(zero_wire, None, None, 1)
+    assert rl.collective_s == 0.0
+    no_key = {k: v for k, v in HLO.items() if k != "wire_bytes"}
+    rl2 = roofline(no_key, None, None, 1)
+    assert rl2.collective_s == pytest.approx(
+        HLO["collective_bytes"] / ICI_BW)
+
+
+# ---------------------------------------------------------------------------
+# closed-form equivalence (the acceptance criterion)
+
+
+def test_engine_roofline_matches_closed_form():
+    rl = roofline(HLO, None, None, 256)
+    assert rl.compute_s == pytest.approx(HLO["flops"] / PEAK_FLOPS)
+    assert rl.memory_s == pytest.approx(HLO["bytes"] / HBM_BW)
+    assert rl.collective_s == pytest.approx(HLO["wire_bytes"] / ICI_BW)
+    assert rl.bound == "compute"
+    assert rl.step_s == pytest.approx(
+        max(rl.compute_s, rl.memory_s, rl.collective_s) + HOST_OVERHEAD_S)
+
+
+def test_engine_breakdown_matches_closed_form():
+    b = breakdown(HLO, host_prep_s=100e-6)
+    accel = HLO["flops"] / PEAK_FLOPS
+    transfer = max(HLO["bytes"] / HBM_BW - HLO["dot_flops"] / PEAK_FLOPS, 0.0)
+    assert b.accelerator_s == pytest.approx(accel, rel=0.05)
+    assert b.transfer_s == pytest.approx(transfer, rel=0.05, abs=1e-12)
+    assert b.collective_s == pytest.approx(HLO["collective_bytes"] / ICI_BW,
+                                           rel=0.05)
+    assert b.host_s == pytest.approx(100e-6 + HOST_OVERHEAD_S)
+
+
+def test_one_run_yields_all_figures():
+    prog = ir.from_hlo(HLO, n_ops=4)
+    res = engine.run(prog, engine.EngineConfig(n_workers=1, interface="hbm",
+                                               host_floor_s=HOST_OVERHEAD_S))
+    # timeline, breakdown, roofline and energy all from the same run
+    kinds = res.per_kind
+    assert res.breakdown.accelerator_s == pytest.approx(kinds["compute"])
+    assert res.breakdown.transfer_s == pytest.approx(
+        kinds.get("transfer", 0.0))
+    assert res.roofline.compute_s == pytest.approx(
+        HLO["flops"] / PEAK_FLOPS)
+    assert res.energy["total_j"] > 0
+    assert res.makespan > 0
+    # the serialized single-worker makespan is the sum of exposed phases
+    assert res.makespan == pytest.approx(
+        kinds["compute"] + kinds.get("transfer", 0.0)
+        + kinds.get("collective", 0.0), rel=1e-6)
+
+
+@pytest.mark.parametrize("net", ["lenet5", "cnn10", "vgg16"])
+def test_graph_breakdown_within_5pct_of_closed_form(net):
+    """Engine aggregation over a tile-level graph program stays within 5%
+    of the closed-form breakdown of the same aggregate costs."""
+    g = build_paper_graph(PAPER_NETS[net], batch=1)
+    prog = ir.from_graph(g, batch=1, max_tile_elems=16384)
+    res = engine.run(prog, engine.EngineConfig(n_workers=1, interface="hbm",
+                                               host_floor_s=HOST_OVERHEAD_S))
+    ref = breakdown(prog.as_hlo_dict())
+    assert res.breakdown.accelerator_s == pytest.approx(
+        ref.accelerator_s, rel=0.05)
+    assert res.breakdown.transfer_s == pytest.approx(
+        ref.transfer_s, rel=0.05, abs=1e-9)
+    rl = roofline(prog.as_hlo_dict(), None, None, 1)
+    assert res.roofline.compute_s == pytest.approx(rl.compute_s, rel=0.05)
+    assert res.roofline.memory_s == pytest.approx(rl.memory_s, rel=0.05)
+
+
+# ---------------------------------------------------------------------------
+# interface study (Fig 11 ordering) and scheduling behaviors
+
+
+def test_dma_vs_acp_ordering_all_paper_nets():
+    """Engine runs reproduce the bench_interfaces ordering: the fused/
+    resident path beats software-managed DMA staging on time AND energy."""
+    for name, net in PAPER_NETS.items():
+        g = build_paper_graph(net, batch=1)
+        prog = ir.from_graph(g, batch=1, max_tile_elems=16384)
+        dma = engine.run(prog, engine.EngineConfig(n_workers=1,
+                                                   interface="dma"))
+        acp = engine.run(prog, engine.EngineConfig(n_workers=1,
+                                                   interface="acp"))
+        assert acp.makespan < dma.makespan, name
+        assert acp.energy["total_j"] < dma.energy["total_j"], name
+
+
+def test_affinity_pins_to_one_worker():
+    ops = [ir.CostedOp(f"r{i}", duration_s=1e-3, affinity="out0")
+           for i in range(8)]
+    res = engine.run(ir.Program(ops), engine.EngineConfig(n_workers=8))
+    workers = {e.worker for e in res.timeline.events if e.kind == "compute"}
+    assert len(workers) == 1
+    assert res.makespan == pytest.approx(8e-3)
+
+
+def test_hbm_port_contention_slows_transfers():
+    ops = [ir.CostedOp(f"t{i}", duration_s=1e-4, transfer_s=1e-4)
+           for i in range(8)]
+    free = engine.run(ir.Program(ops),
+                      engine.EngineConfig(n_workers=8, hbm_ports=0))
+    contended = engine.run(ir.Program(ops),
+                           engine.EngineConfig(n_workers=8, hbm_ports=1))
+    f_kinds = free.per_kind
+    c_kinds = contended.per_kind
+    assert c_kinds["transfer"] > f_kinds["transfer"]
+    assert contended.makespan > free.makespan
+
+
+def test_host_dispatch_serializes_and_threads_help():
+    ops = [ir.CostedOp(f"o{i}", flops=1e6, bytes_in=1e6, bytes_out=1e6)
+           for i in range(16)]
+    one = engine.run(ir.Program(ops), engine.EngineConfig(
+        n_workers=4, host_dispatch_s=1e-6, host_bw=20e9, host_threads=1))
+    eight = engine.run(ir.Program(ops), engine.EngineConfig(
+        n_workers=4, host_dispatch_s=1e-6, host_bw=20e9, host_threads=8))
+    assert one.per_kind["host"] > eight.per_kind["host"]
+    # host lane never overlaps itself
+    host_evs = sorted((e for e in one.timeline.events if e.kind == "host"),
+                      key=lambda e: e.start)
+    for a, b in zip(host_evs, host_evs[1:]):
+        assert b.start >= a.end - 1e-15
+
+
+def test_dependency_cycle_raises():
+    ops = [ir.CostedOp("a", deps=("b",)), ir.CostedOp("b", deps=("a",))]
+    with pytest.raises(ValueError):
+        engine.run(ir.Program(ops), engine.EngineConfig())

@@ -2,7 +2,7 @@
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core.tensor import TensorSpec
 from repro.core.tiling import (MXU_DIM, choose_matmul_tiling, choose_tiling,

@@ -1,0 +1,24 @@
+#!/usr/bin/env bash
+# CI gate: tier-1 tests + a smoke benchmark through the unified engine,
+# so regressions in repro/sim surface automatically.
+#
+#   tools/ci.sh            # full tier-1 (excluding slow) + smoke benches
+#   tools/ci.sh --fast     # engine/scheduler/dist tests only + one bench
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+if [[ "${1:-}" == "--fast" ]]; then
+  python -m pytest -q -m "not slow" \
+    tests/test_sim_engine.py tests/test_scheduler.py tests/test_dist.py \
+    tests/test_sharding.py
+else
+  python -m pytest -q -m "not slow"
+fi
+
+# smoke the engine-driven case studies (multiacc exercises from_graph +
+# worker sweep + port contention; interfaces exercises dma vs acp)
+python -m benchmarks.run --only multiacc
+python -m benchmarks.run --only interfaces
+
+echo "CI OK"
