@@ -2,8 +2,9 @@
 
 Runs the real JAX ISP on a 720p raw frame for the measured host number,
 then composes the modeled ISP program with the CNN10 graph program and
-simulates the WHOLE frame in one engine run per accelerator size (Fig 20's
-8x8 / 4x8 / 4x4 PE sweep maps to worker count + peak-FLOPS scaling)."""
+sweeps the WHOLE frame over the accelerator-size grid in one batched
+``frame_sweep`` call (Fig 20's 8x8 / 4x8 / 4x4 PE sweep maps to worker
+count + peak-FLOPS scaling)."""
 from __future__ import annotations
 
 import dataclasses
@@ -12,15 +13,18 @@ import time
 import jax
 import numpy as np
 
-from repro.apps.camera import camera_pipeline, camera_program
+from repro.apps.camera import camera_pipeline, frame_sweep
 from repro.configs.paper_nets import PAPER_NETS
-from repro.sim import engine, ir
+from repro.sim import engine
 from repro.sim.report import row
+from repro.sim.sweep import lower_graph, sweep
 from benchmarks.common import build_paper_graph
 
 # the paper's measured on-SoC camera-pipeline time; the wall-clock row above
 # it is this 1-core host running the same JAX ISP (reported for honesty)
 ISP_SOC_MS = 13.2
+
+PE_GRID = ((8, 1.0, "8x8PE"), (4, 0.5, "4x8PE"), (2, 0.25, "4x4PE"))
 
 
 def run(emit=print):
@@ -37,19 +41,18 @@ def run(emit=print):
                     "frame_budget_ms=33 (paper ISP: 13.2ms)"))
 
     g = build_paper_graph(PAPER_NETS["cnn10"], batch=1)
-    dnn_prog = ir.from_graph(g, batch=1, max_tile_elems=16384)
-    frame_prog = camera_program((720, 1280), (32, 32)).then(dnn_prog,
-                                                            name="frame")
+    dnn_prog = lower_graph(g, batch=1, max_tile_elems=16384)
     # calibrate the simulated CNN10 8x8-PE point to the paper's 7.3 ms
     base_cfg = engine.EngineConfig(n_workers=8, interface="acp", hbm_ports=4)
-    base_dnn = engine.run(dnn_prog, base_cfg).makespan
-    scale = 7.3e-3 / base_dnn
-    for workers, pe_frac, label in ((8, 1.0, "8x8PE"), (4, 0.5, "4x8PE"),
-                                    (2, 0.25, "4x4PE")):
-        cfg = dataclasses.replace(base_cfg, n_workers=workers,
-                                  peak_flops=base_cfg.peak_flops * pe_frac,
-                                  datapath_scale=pe_frac)
-        res = engine.run(frame_prog, cfg)
+    (base_dnn,) = sweep(dnn_prog, [base_cfg])
+    scale = 7.3e-3 / base_dnn.makespan
+    configs = [dataclasses.replace(base_cfg, n_workers=workers,
+                                   peak_flops=base_cfg.peak_flops * pe_frac,
+                                   datapath_scale=pe_frac)
+               for workers, pe_frac, _ in PE_GRID]
+    _, results = frame_sweep(dnn_prog, configs, hw=(720, 1280),
+                             dnn_hw=(32, 32))
+    for (workers, pe_frac, label), res in zip(PE_GRID, results):
         phases = res.per_phase
         isp_ms = phases.get("isp", 0.0) * 1e3  # modeled, unscaled
         dnn_ms = (res.makespan - phases.get("isp", 0.0)) * scale * 1e3

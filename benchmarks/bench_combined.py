@@ -3,15 +3,16 @@ path + 8 workers + 8 host threads) per paper network and report combined
 end-to-end latency reduction vs the baseline (DMA, 1 accelerator, 1
 thread).  Paper: 42-80% reduction (1.8-5x).
 
-Migrated to the unified engine: baseline and optimized are just two
-``EngineConfig``s over the same lowered program — interface choice, worker
-count, HBM ports and host threading all compose inside one simulation
-instead of three separate bolt-on sums."""
+Baseline and optimized are one two-config ``sweep()`` over the same
+(memoized) lowering — interface choice, worker count, HBM ports and host
+threading all compose inside one simulation instead of three separate
+bolt-on sums."""
 from __future__ import annotations
 
 from repro.configs.paper_nets import PAPER_NETS
-from repro.sim import engine, ir
+from repro.sim import engine
 from repro.sim.report import row
+from repro.sim.sweep import lower_graph, sweep
 from benchmarks.common import build_paper_graph
 
 HOST_DISPATCH_S = 1e-6   # per-tile command-queue push (framework)
@@ -28,15 +29,16 @@ def _config(*, n_acc, fused, host_threads):
         host_threads=host_threads)
 
 
+CONFIGS = [_config(n_acc=1, fused=False, host_threads=1),
+           _config(n_acc=8, fused=True, host_threads=8)]
+
+
 def run(emit=print):
     rows = []
     for name, net in PAPER_NETS.items():
         g = build_paper_graph(net, batch=1)
-        prog = ir.from_graph(g, batch=1, max_tile_elems=16384)
-        base = engine.run(prog, _config(n_acc=1, fused=False,
-                                        host_threads=1))
-        opt = engine.run(prog, _config(n_acc=8, fused=True,
-                                       host_threads=8))
+        prog = lower_graph(g, batch=1, max_tile_elems=16384)
+        base, opt = sweep(prog, CONFIGS)
         rows.append(row(
             f"combined/{name}", opt.makespan,
             f"baseline_us={base.makespan*1e6:.1f} "

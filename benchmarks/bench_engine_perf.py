@@ -1,0 +1,168 @@
+"""Engine-performance benchmark: the perf trajectory of ``repro.sim``.
+
+Times the executor on small / medium / large programs — a lenet5 tile
+graph, a vgg16 tile DAG at scratchpad-sized tiles, and a multi-thousand-op
+gemma-2b token-by-token decode lowering (``ir.from_decode``) — plus an
+8-config design-space ``sweep()`` of the decode program.
+
+Full mode (``python -m benchmarks.bench_engine_perf``) also times the
+frozen PR-base executor (``tests/_reference_engine.py``) on every case and
+writes the before/after numbers to ``BENCH_engine.json`` at the repo root,
+which doubles as the CI perf budget.
+
+``--quick`` (the ``tools/ci.sh`` perf smoke) times only the current engine
+and exits 1 if any case runs slower than 2x its recorded budget.
+"""
+from __future__ import annotations
+
+import argparse
+import importlib.util
+import json
+import pathlib
+import sys
+import time
+
+from repro.configs.gemma_2b import FULL as GEMMA_2B
+from repro.configs.paper_nets import PAPER_NETS
+from repro.sim import engine, ir
+from repro.sim.report import row
+from repro.sim.sweep import lower_graph, sweep
+from benchmarks.common import build_paper_graph
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+BENCH_JSON = ROOT / "BENCH_engine.json"
+
+SWEEP_CONFIGS = [
+    engine.EngineConfig(n_workers=1, interface="hbm", hbm_ports=4),
+    engine.EngineConfig(n_workers=1, interface="acp", hbm_ports=4),
+    engine.EngineConfig(n_workers=2, interface="dma", hbm_ports=4),
+    engine.EngineConfig(n_workers=4, interface="hbm", hbm_ports=1,
+                        host_dispatch_s=1e-6),
+    engine.EngineConfig(n_workers=1, interface="hbm"),
+    engine.EngineConfig(n_workers=8, interface="acp", hbm_ports=2,
+                        host_dispatch_s=1e-6, host_bw=20e9, host_threads=8),
+    engine.EngineConfig(n_workers=1, interface="dma", hbm_ports=4,
+                        host_dispatch_s=1e-6),
+    engine.EngineConfig(n_workers=2, interface="hbm", hbm_ports=0.5,
+                        datapath_scale=0.5),
+]
+CASE_CONFIG = engine.EngineConfig(n_workers=8, interface="hbm", hbm_ports=4)
+
+
+def _load_reference():
+    p = ROOT / "tests" / "_reference_engine.py"
+    spec = importlib.util.spec_from_file_location("_reference_engine", p)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod.run_reference
+
+
+def _cases():
+    small = lower_graph(build_paper_graph(PAPER_NETS["lenet5"], batch=1),
+                        batch=1, max_tile_elems=16384)
+    medium = lower_graph(build_paper_graph(PAPER_NETS["vgg16"], batch=1),
+                         batch=1, max_tile_elems=2048)
+    large = lower_graph(build_paper_graph(PAPER_NETS["vgg16"], batch=1),
+                        batch=1, max_tile_elems=128)
+    decode = ir.from_decode(GEMMA_2B, n_tokens=640, ops_per_token=8)
+    return [("graph_small_lenet5", small), ("graph_medium_vgg16", medium),
+            ("graph_large_vgg16_3k", large),
+            ("decode_5k_gemma2b", decode)]
+
+
+def _best_of(fn, repeats=3):
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return min(ts)
+
+
+def measure(full: bool):
+    run_reference = _load_reference() if full else None
+    out = {"cases": {}, "budget_s": {}}
+    rows = []
+    cases = _cases()
+    for name, prog in cases:
+        plan = engine.prepare(prog)
+        engine.run(prog, CASE_CONFIG, plan=plan)        # warm (numpy etc.)
+        t_new = _best_of(lambda: engine.run(prog, CASE_CONFIG, plan=plan))
+        case = {"n_ops": len(prog.ops), "engine_s": round(t_new, 6)}
+        if full:
+            t_ref = _best_of(
+                lambda: run_reference(prog, CASE_CONFIG), repeats=2)
+            case["reference_s"] = round(t_ref, 6)
+            case["speedup"] = round(t_ref / t_new, 2)
+        out["cases"][name] = case
+        out["budget_s"][name] = round(t_new, 6)
+        rows.append(row(f"engine_perf/{name}", t_new,
+                        f"n_ops={len(prog.ops)} "
+                        + (f"pr_base_us={case['reference_s']*1e6:.0f} "
+                           f"speedup={case['speedup']}x" if full else
+                           "quick")))
+    decode = cases[-1][1]
+    sweep(decode, SWEEP_CONFIGS[:1])                    # warm
+    t_sweep = _best_of(lambda: sweep(decode, SWEEP_CONFIGS), repeats=2)
+    sw = {"n_ops": len(decode.ops), "n_configs": len(SWEEP_CONFIGS),
+          "sweep_s": round(t_sweep, 6)}
+    if full:
+        t_serial = _best_of(
+            lambda: [run_reference(decode, c) for c in SWEEP_CONFIGS],
+            repeats=1)
+        sw["serial_reference_s"] = round(t_serial, 6)
+        sw["speedup"] = round(t_serial / t_sweep, 2)
+    out["sweep_8cfg_decode_5k"] = sw
+    out["budget_s"]["sweep_8cfg_decode_5k"] = round(t_sweep, 6)
+    rows.append(row("engine_perf/sweep_8cfg_decode_5k", t_sweep,
+                    f"n_ops={sw['n_ops']} n_configs={sw['n_configs']} "
+                    + (f"serial_pr_base_s={sw['serial_reference_s']:.3f} "
+                       f"speedup={sw['speedup']}x" if full else "quick")))
+    return out, rows
+
+
+def run(emit=print):
+    """benchmarks.run driver entry: quick engine-side timings only."""
+    _, rows = measure(full=False)
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="engine-only timing + regression gate vs the "
+                         "budgets in BENCH_engine.json (CI perf smoke)")
+    args = ap.parse_args()
+    out, rows = measure(full=not args.quick)
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']},\"{r['derived']}\"")
+    if args.quick:
+        if not BENCH_JSON.exists():
+            print(f"no {BENCH_JSON.name}; run without --quick to record "
+                  "budgets", file=sys.stderr)
+            sys.exit(1)
+        budgets = json.loads(BENCH_JSON.read_text()).get("budget_s", {})
+        failed = False
+        for name, measured in out["budget_s"].items():
+            budget = budgets.get(name)
+            if budget is None:
+                continue
+            verdict = "OK" if measured <= 2.0 * budget else "REGRESSION"
+            print(f"perf-smoke {name}: {measured*1e3:.1f}ms vs budget "
+                  f"{budget*1e3:.1f}ms (2x gate) {verdict}")
+            failed |= verdict != "OK"
+        if failed:
+            print("engine perf regressed >2x against BENCH_engine.json",
+                  file=sys.stderr)
+            sys.exit(1)
+        return
+    out["recorded"] = time.strftime("%Y-%m-%d")
+    out["note"] = ("engine_s/sweep_s: current engine; reference_s: frozen "
+                   "PR-base executor (tests/_reference_engine.py); "
+                   "budget_s feeds the tools/ci.sh --quick 2x gate")
+    BENCH_JSON.write_text(json.dumps(out, indent=2) + "\n")
+    print(f"wrote {BENCH_JSON}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,31 +1,31 @@
 """Fig 11 analogue: DMA-like vs fused/resident (ACP-analogue) data paths.
 
-Migrated to the unified engine: the SAME lowered program runs twice, once
-with ``interface="dma"`` (software-managed HBM staging, serialized) and once
-with ``interface="acp"`` (VMEM-resident producer->consumer path); latency
-AND energy come out of each run."""
+On the batched sweep layer: the network is lowered ONCE (memoized
+``lower_graph``) and both interface configs run through ``sweep()`` over
+the shared dependency plan; latency AND energy come out of each run."""
 from __future__ import annotations
 
 from repro.configs.paper_nets import PAPER_NETS
-from repro.sim import engine, ir
+from repro.sim import engine
 from repro.sim.report import row
+from repro.sim.sweep import lower_graph, sweep
 from benchmarks.common import build_paper_graph
+
+IFACE_CONFIGS = [engine.EngineConfig(n_workers=1, interface="dma"),
+                 engine.EngineConfig(n_workers=1, interface="acp")]
 
 
 def run(emit=print):
     rows = []
     for name, net in PAPER_NETS.items():
         g = build_paper_graph(net, batch=1)
-        prog = ir.from_graph(g, batch=1, max_tile_elems=16384)
-        res = {}
-        for iface in ("dma", "acp"):
-            res[iface] = engine.run(prog, engine.EngineConfig(
-                n_workers=1, interface=iface))
-        t_dma = res["dma"].per_kind.get("transfer", 0.0)
-        t_acp = res["acp"].per_kind.get("transfer", 0.0)
-        e_dma = res["dma"].energy["total_j"]
-        e_acp = res["acp"].energy["total_j"]
-        end_dma, end_acp = res["dma"].makespan, res["acp"].makespan
+        prog = lower_graph(g, batch=1, max_tile_elems=16384)
+        dma, acp = sweep(prog, IFACE_CONFIGS)
+        t_dma = dma.per_kind.get("transfer", 0.0)
+        t_acp = acp.per_kind.get("transfer", 0.0)
+        e_dma = dma.energy["total_j"]
+        e_acp = acp.energy["total_j"]
+        end_dma, end_acp = dma.makespan, acp.makespan
         rows.append(row(
             f"interfaces/{name}", end_dma,
             f"acp_us={end_acp*1e6:.1f} "

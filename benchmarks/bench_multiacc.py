@@ -1,27 +1,32 @@
 """Fig 12/13 analogue: multi-accelerator (worker) scaling on the paper's
-networks via the unified engine — reduction affinity caps the speedup and
-concurrent tile transfers contend for HBM ports (the Fig 13 effect)."""
+networks — reduction affinity caps the speedup and concurrent tile
+transfers contend for HBM ports (the Fig 13 effect).  The worker-count grid
+is one ``sweep()`` over a single lowering per network."""
 from __future__ import annotations
 
+import dataclasses
+
 from repro.configs.paper_nets import PAPER_NETS
-from repro.sim import engine, ir
+from repro.sim import engine
 from repro.sim.report import row
+from repro.sim.sweep import lower_graph, sweep
 from benchmarks.common import build_paper_graph
+
+WORKER_GRID = (1, 2, 4, 8)
+BASE = engine.EngineConfig(interface="hbm", hbm_ports=4)
 
 
 def run(emit=print):
     rows = []
+    configs = [dataclasses.replace(BASE, n_workers=n) for n in WORKER_GRID]
     for name in ("minerva", "lenet5", "cnn10", "vgg16", "elu16"):
         net = PAPER_NETS[name]
         g = build_paper_graph(net, batch=1)
         # small tiles ~ the paper's 32KB scratchpads -> rich tile parallelism
-        prog = ir.from_graph(g, batch=1, max_tile_elems=2048)
-        base = None
-        for n_acc in (1, 2, 4, 8):
-            res = engine.run(prog, engine.EngineConfig(
-                n_workers=n_acc, interface="hbm", hbm_ports=4))
-            if base is None:
-                base = res.makespan
+        prog = lower_graph(g, batch=1, max_tile_elems=2048)
+        results = sweep(prog, configs)
+        base = results[0].makespan
+        for n_acc, res in zip(WORKER_GRID, results):
             kinds = res.per_kind
             rows.append(row(
                 f"multiacc/{name}/acc{n_acc}", res.makespan,

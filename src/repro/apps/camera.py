@@ -123,3 +123,18 @@ def camera_program(hw=(720, 1280), dnn_hw=(32, 32)):
         prev = f"isp/{name}"
     return Program(ops, name="camera_isp", source="custom",
                    meta={"hw": hw, "dnn_hw": dnn_hw})
+
+
+def frame_sweep(dnn_program, configs, hw=(720, 1280), dnn_hw=(32, 32),
+                name="frame"):
+    """Whole-frame design-space sweep: ISP program composed with the DNN
+    program, evaluated under every SoC config through the batched
+    ``repro.sim.sweep`` layer (one lowering + shared dependency plan).
+
+    Returns ``(frame_program, [EngineResult per config])`` — the Fig 19/20
+    accelerator-size study is one call with a PE-scaled config grid.
+    """
+    from repro.sim.sweep import sweep
+
+    frame = camera_program(hw, dnn_hw).then(dnn_program, name=name)
+    return frame, sweep(frame, configs)

@@ -16,6 +16,19 @@ Lowerings:
 
 ``core.simulator.roofline``/``breakdown`` and ``core.scheduler.simulate``
 remain as thin wrappers over this engine for API stability.
+
+Design-space exploration goes through ``repro.sim.sweep``:
+  sweep(program, configs)     one lowering + shared dependency plan, many
+                              configs (serial / threads / processes)
+  lower_graph / lower_hlo     memoized lowerings keyed on
+                              (graph identity, batch, tile params)
+The executor core is O(E log E) (heap ready queue, incremental HBM-port
+contention) with a prefix-sum fast path for linear-chain programs that is
+bit-identical to the event loop.
 """
-from repro.sim.engine import EngineConfig, EngineResult, run  # noqa: F401
-from repro.sim.ir import CostedOp, Program, from_graph, from_hlo  # noqa: F401
+from repro.sim.engine import (EngineConfig, EngineResult, Plan,  # noqa: F401
+                              prepare, run)
+from repro.sim.ir import (CostedOp, Program, from_decode,  # noqa: F401
+                          from_graph, from_hlo)
+from repro.sim.sweep import (as_records, lower_graph, lower_hlo,  # noqa: F401
+                             sweep)

@@ -17,14 +17,40 @@
 
 The result carries the Timeline, the Fig-1 Breakdown, the Roofline terms and
 the energy estimate of the *same* run.
+
+Performance.  The core is O(E log E) in the number of ops/events: the
+per-wave LPT sort is a max-heap ready queue, and HBM-port contention is
+answered from an incrementally maintained active-transfer structure
+(finished windows are heap-expired once no future transfer can start before
+their end, so memory stays bounded by the live concurrency instead of the
+whole history).  Per-op interface/compute costs are schedule-independent
+and are computed once, outside the loop.  Linear-chain programs (the
+``from_hlo`` macro-op shape and token-by-token decode) take a prefix-sum
+fast path that reproduces the event loop bit-for-bit.  ``prepare()`` lets
+callers (``repro.sim.sweep``) share the dependency bookkeeping across many
+configs of the same program.
+
+Contention sampling semantics.  ``contention_factor`` is evaluated once, at
+a transfer's *start instant*: the factor counts the transfers already in
+flight at that moment and is locked in for the whole window.  A long
+transfer that later overlaps newly issued ones is NOT retroactively slowed
+— only the newcomers see the congestion.  This start-instant convention is
+deliberate: it keeps single-chain programs exactly equal to the closed-form
+interface sums (each transfer starts alone, factor 1), and it mirrors a
+bandwidth reservation made at issue time.  Studies that need time-resolved
+sharing can shrink op granularity (smaller tiles -> shorter windows) until
+the sampling error vanishes.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from bisect import bisect_right, insort
+from dataclasses import dataclass, field
+from heapq import heapify, heappop, heappush
+from itertools import accumulate
 from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.energy import DEFAULT_ENERGY, EnergyModel
-from repro.core.timeline import Timeline
+from repro.core.timeline import Event, Timeline
 from repro.sim import hw, report
 from repro.sim.ir import CostedOp, Program
 
@@ -121,14 +147,91 @@ class EngineResult:
 
     def utilization(self, worker: Optional[str] = None) -> float:
         """Accelerator-worker utilization (the host and ICI lanes are
-        resources, not workers — they don't dilute the denominator)."""
+        resources, not workers — they don't dilute the denominator).
+
+        The denominator is ``config.n_workers``: a provisioned worker that
+        never receives an op is idle capacity and must count, otherwise a
+        run that strands workers overstates its utilization."""
         if worker is not None:
             return self.timeline.utilization(worker)
-        evs = [e for e in self.timeline.events
-               if e.worker.startswith("acc") and e.kind != "idle"]
-        workers = {e.worker for e in evs}
-        total = self.timeline.makespan * max(len(workers), 1)
-        return sum(e.duration for e in evs) / total if total else 0.0
+        busy = sum(e.duration for e in self.timeline.events
+                   if e.worker.startswith("acc") and e.kind != "idle")
+        total = self.timeline.makespan * max(self.config.n_workers, 1)
+        return busy / total if total else 0.0
+
+
+# ---------------------------------------------------------------------------
+# shared dependency bookkeeping (computed once per program, reused per run)
+
+
+@dataclass
+class Plan:
+    """Schedule-independent structure of a ``Program``.
+
+    ``prepare()`` derives it once; ``run(..., plan=...)`` and the sweep
+    layer then reuse it across every config instead of rebuilding the
+    ops/consumers/n_waiting dicts per run."""
+    ops: Dict[str, CostedOp]
+    n_waiting: Dict[str, int]
+    consumers: Dict[str, Tuple[str, ...]]
+    roots: List[str]
+    is_chain: bool
+    totals: Dict[str, float] = field(default_factory=dict)
+
+
+def prepare(program: Program) -> Plan:
+    ops = {op.name: op for op in program.ops}
+    n_waiting = {op.name: sum(1 for d in op.deps if d in ops)
+                 for op in program.ops}
+    consumers_l: Dict[str, List[str]] = {}
+    for op in program.ops:
+        for d in op.deps:
+            if d in ops:
+                consumers_l.setdefault(d, []).append(op.name)
+    roots = [op.name for op in program.ops if n_waiting[op.name] == 0]
+    return Plan(ops=ops, n_waiting=n_waiting,
+                consumers={k: tuple(v) for k, v in consumers_l.items()},
+                roots=roots, is_chain=_is_chain(program, ops),
+                totals=program.totals())
+
+
+def _is_chain(program: Program, ops: Dict[str, CostedOp]) -> bool:
+    """True when the program is a pure linear chain the fast path handles:
+    op i depends exactly on op i-1, unique names, no affinity pinning."""
+    if len(ops) != len(program.ops):
+        return False
+    prev = None
+    for op in program.ops:
+        if op.affinity is not None:
+            return False
+        want = () if prev is None else (prev,)
+        if tuple(op.deps) != want:
+            return False
+        prev = op.name
+    return True
+
+
+# ---------------------------------------------------------------------------
+# per-op costs (schedule-independent; hoisted out of the event loop)
+
+
+def _transfer_base(op: CostedOp, config: EngineConfig,
+                   iface: Callable) -> Tuple[float, float, float]:
+    """(full seconds, exposed seconds, energy) for this op's staging.
+
+    ``full`` is the interface time at nominal bandwidth; ``exposed`` is
+    what the worker actually stalls on — in overlap mode the MXU stream
+    hides operand traffic behind the op's dot compute."""
+    if op.transfer_s is not None:
+        return op.transfer_s, op.transfer_s, config.energy.hbm(
+            op.transfer_s * config.hbm_bw)
+    if not op.bytes:
+        return 0.0, 0.0, 0.0
+    t, e = iface(op.bytes, config)
+    t /= config.datapath_scale
+    exposed = (max(t - op.dot_flops / config.peak_flops, 0.0)
+               if config.overlap else t)
+    return t, exposed, e
 
 
 # ---------------------------------------------------------------------------
@@ -136,141 +239,420 @@ class EngineResult:
 
 
 def run(program: Program, config: EngineConfig = EngineConfig(), *,
-        model_flops: float = 0.0, host_s: Optional[float] = None
+        model_flops: float = 0.0, host_s: Optional[float] = None,
+        plan: Optional[Plan] = None, fast: Optional[bool] = None
         ) -> EngineResult:
     """Simulate ``program`` on ``config``; returns every metric of the run.
 
     ``host_s``: roofline host floor (defaults to ``config.host_floor_s``).
+    ``plan``: precomputed ``prepare(program)`` (sweep layer shares it).
+    ``fast``: force (True) or forbid (False) the linear-chain prefix-sum
+    path; default auto-detects.  Both paths are bit-identical.
     """
     if config.interface not in INTERFACES:
         raise ValueError(f"unknown interface {config.interface!r}; "
                          f"one of {sorted(INTERFACES)}")
+    if plan is None:
+        plan = prepare(program)
+    if not plan.roots and program.ops:
+        raise ValueError("dependency cycle in program")
+    host_floor = config.host_floor_s if host_s is None else host_s
+    if fast is None:
+        fast = plan.is_chain
+    if (fast and plan.is_chain and program.ops
+            and type(config.energy) is EnergyModel):
+        out = _run_chain(program, config)
+        if out is not None:
+            tl, iface_time_total, transfer_energy, makespan, kinds = out
+            return _finalize(tl, program, config, plan, iface_time_total,
+                             transfer_energy, model_flops, host_floor,
+                             makespan=makespan, kinds=kinds)
+    tl, iface_time_total, transfer_energy = _run_events(
+        program, config, plan)
+    return _finalize(tl, program, config, plan, iface_time_total,
+                     transfer_energy, model_flops, host_floor)
+
+
+def _run_events(program: Program, config: EngineConfig,
+                plan: Plan) -> Tuple[Timeline, float, float]:
+    """General DAG executor: heap ready queue + incremental contention."""
     iface = INTERFACES[config.interface]
     tl = Timeline()
+    events = tl.events
     n = max(config.n_workers, 1)
     avail = [0.0] * n
+    worker_names = [f"acc{i}" for i in range(n)]
     affinity_worker: Dict[str, int] = {}
     done: Dict[str, float] = {}
     host_free = 0.0
     ici_free = 0.0
-    transfers: List[Tuple[float, float]] = []   # active (start, end) windows
     transfer_energy = 0.0
-    iface_time_total = [0.0]    # full interface seconds charged this run
+    iface_time_total = 0.0      # full interface seconds charged this run
 
-    # dependency bookkeeping
-    ops = {op.name: op for op in program.ops}
-    n_waiting = {op.name: sum(1 for d in op.deps if d in ops)
-                 for op in program.ops}
-    consumers: Dict[str, List[str]] = {}
-    for op in program.ops:
-        for d in op.deps:
-            if d in ops:
-                consumers.setdefault(d, []).append(op.name)
-    ready = [op.name for op in program.ops if n_waiting[op.name] == 0]
-    if not ready and program.ops:
-        raise ValueError("dependency cycle in program")
+    ops = plan.ops
+    consumers = plan.consumers
+    n_waiting = dict(plan.n_waiting)
+
+    # hoisted per-op costs (schedule-independent)
+    peak = config.peak_flops
+    comp_s = {nm: (op.duration_s if op.duration_s is not None
+                   else op.flops / peak) for nm, op in ops.items()}
+    xfer_base = {nm: _transfer_base(op, config, iface)
+                 for nm, op in ops.items()}
+    host_dispatch = config.host_dispatch_s
+    host_bw = config.host_bw
+    host_threads = config.host_threads
+
+    # active-transfer structure for HBM-port contention: two sorted arrays
+    # answer "how many windows are live at t" in O(log k); a heap keyed on
+    # window end expires history once no future transfer can start before
+    # it (every future start >= min(avail), which only grows), so the
+    # structure tracks live concurrency instead of the whole run history.
+    # NOTE: contention is sampled once, at the transfer's START INSTANT,
+    # and locked in for the window (see module header for the semantics).
+    ports = config.hbm_ports
+    xfer_starts: List[float] = []
+    xfer_ends: List[float] = []
+    window_heap: List[Tuple[float, float]] = []     # (end, start)
+    compact_at = 64
+    # expiry bookkeeping: a future transfer can start no earlier than the
+    # avail of the worker it lands on.  While any remaining op is
+    # "unrestricted" (no affinity, or an affinity key not yet pinned) it
+    # may land on the globally least-loaded worker, so the safe expiry
+    # bound is min(avail); once every remaining op is pinned, only the
+    # pinned workers' avail matters — idle provisioned workers no longer
+    # freeze the bound at 0 and the history stays compactable.
+    aff_remaining: Dict[str, int] = {}
+    n_unrestricted = 0
+    for p_op in program.ops:
+        if p_op.affinity is None:
+            n_unrestricted += 1
+        else:
+            aff_remaining[p_op.affinity] = \
+                aff_remaining.get(p_op.affinity, 0) + 1
+    n_unrestricted += sum(aff_remaining.values())
+
+    def _expiry_bound() -> float:
+        if n_unrestricted > 0:
+            return min(avail)
+        live_workers = set()
+        for k, c in aff_remaining.items():
+            if c > 0:
+                pinned = affinity_worker.get(k)
+                if pinned is None:          # outstanding unpinned key:
+                    return min(avail)       # it may land anywhere
+                live_workers.add(pinned)
+        if not live_workers:
+            return float("inf")             # no transfer can query again
+        return min(avail[w] for w in live_workers)
+
+    # max-heap ready queue keyed on compute time: replicates the legacy
+    # per-wave LPT sort exactly — ``seq`` reproduces the stable-sort tie
+    # order (insertion order within a wave), and newly readied ops wait in
+    # ``next_wave`` until the current wave drains, like the old list swap.
+    heap = [(-comp_s[nm], i, nm) for i, nm in enumerate(plan.roots)]
+    heapify(heap)
+    seq = len(heap)
+    next_wave: List[Tuple[float, int, str]] = []
     scheduled = 0
 
-    def op_compute_s(op: CostedOp) -> float:
-        if op.duration_s is not None:
-            return op.duration_s
-        return op.flops / config.peak_flops
-
-    def op_transfer_base(op: CostedOp) -> Tuple[float, float, float]:
-        """(full seconds, exposed seconds, energy) for this op's staging.
-
-        ``full`` is the interface time at nominal bandwidth; ``exposed`` is
-        what the worker actually stalls on — in overlap mode the MXU stream
-        hides operand traffic behind the op's dot compute."""
-        if op.transfer_s is not None:
-            return op.transfer_s, op.transfer_s, config.energy.hbm(
-                op.transfer_s * config.hbm_bw)
-        if not op.bytes:
-            return 0.0, 0.0, 0.0
-        t, e = iface(op.bytes, config)
-        t /= config.datapath_scale
-        exposed = (max(t - op.dot_flops / config.peak_flops, 0.0)
-                   if config.overlap else t)
-        return t, exposed, e
-
-    def contention_factor(start: float) -> float:
-        if config.hbm_ports <= 0:
-            return 1.0
-        live = 1 + sum(1 for (s, e) in transfers if s <= start < e)
-        return max(1.0, live / config.hbm_ports)
-
-    while ready:
-        # LPT among currently-ready ops (the legacy scheduler heuristic)
-        ready.sort(key=lambda nm: -op_compute_s(ops[nm]))
-        batch, ready = ready, []
-        for nm in batch:
-            op = ops[nm]
-            if op.affinity is not None and op.affinity in affinity_worker:
-                w = affinity_worker[op.affinity]
+    while heap:
+        _, _, nm = heappop(heap)
+        op = ops[nm]
+        aff = op.affinity
+        if aff is not None and aff in affinity_worker:
+            w = affinity_worker[aff]
+            aff_remaining[aff] -= 1
+        else:
+            w = min(range(n), key=avail.__getitem__)
+            if aff is not None:
+                affinity_worker[aff] = w
+                # this key's ops are henceforth restricted to worker w
+                n_unrestricted -= aff_remaining[aff]
+                aff_remaining[aff] -= 1
             else:
-                w = min(range(n), key=lambda i: avail[i])
-                if op.affinity is not None:
-                    affinity_worker[op.affinity] = w
-            dep_ready = max((done[d] for d in op.deps if d in done),
-                            default=0.0)
-            t = max(avail[w], dep_ready)
-            # serial host dispatch (framework time) gates the launch
-            host_cost = (config.host_dispatch_s
-                         + (op.bytes / config.host_bw / config.host_threads
-                            if config.host_bw else 0.0))
-            if host_cost > 0.0:
-                h0 = max(host_free, dep_ready)
-                tl.add("host", f"{op.name}:dispatch", h0, host_cost, "host",
-                       phase=op.phase)
-                host_free = h0 + host_cost
-                t = max(t, host_free)
-            # staged input transfer, with HBM-port contention
-            full, xfer, xe = op_transfer_base(op)
-            transfer_energy += xe
-            if xfer > 0.0:
-                factor = contention_factor(t)
-                xfer *= factor
-                tl.add(f"acc{w}", f"{op.name}:xfer", t, xfer, "transfer",
-                       phase=op.phase)
-                transfers.append((t, t + xfer))
-                iface_time_total[0] += full * factor
-                t += xfer
+                n_unrestricted -= 1
+        dep_ready = max((done[d] for d in op.deps if d in done),
+                        default=0.0)
+        t = avail[w] if avail[w] > dep_ready else dep_ready
+        # serial host dispatch (framework time) gates the launch
+        host_cost = (host_dispatch
+                     + (op.bytes / host_bw / host_threads
+                        if host_bw else 0.0))
+        if host_cost > 0.0:
+            h0 = host_free if host_free > dep_ready else dep_ready
+            events.append(Event("host", f"{nm}:dispatch", h0, host_cost,
+                                "host", op.phase))
+            host_free = h0 + host_cost
+            if host_free > t:
+                t = host_free
+        # staged input transfer, with HBM-port contention
+        full, xfer, xe = xfer_base[nm]
+        transfer_energy += xe
+        if xfer > 0.0:
+            if ports <= 0:
+                factor = 1.0
             else:
-                iface_time_total[0] += full
-            comp = op_compute_s(op)
-            tl.add(f"acc{w}", op.name, t, comp, "compute", phase=op.phase)
-            t += comp
-            avail[w] = t
-            # collective traffic serializes on the ICI lane (operand-sum
-            # metric, matching the closed-form breakdown; the ring-model
-            # wire bytes feed the roofline collective term instead)
-            if op.collective_bytes > 0.0:
-                c0 = max(ici_free, t)
-                cdur = op.collective_bytes / config.ici_bw
-                tl.add("ici", f"{op.name}:coll", c0, cdur, "collective",
-                       phase=op.phase)
-                ici_free = c0 + cdur
-                t = c0 + cdur
-            done[nm] = t
-            scheduled += 1
-            for cn in consumers.get(nm, ()):
-                n_waiting[cn] -= 1
-                if n_waiting[cn] == 0:
-                    ready.append(cn)
+                live = (1 + bisect_right(xfer_starts, t)
+                        - bisect_right(xfer_ends, t))
+                factor = max(1.0, live / ports)
+            xfer *= factor
+            events.append(Event(worker_names[w], f"{nm}:xfer", t, xfer,
+                                "transfer", op.phase))
+            end = t + xfer
+            insort(xfer_starts, t)
+            insort(xfer_ends, end)
+            heappush(window_heap, (end, t))
+            if len(window_heap) >= compact_at:
+                # expire windows no future transfer can overlap: every
+                # future start is >= the expiry bound, and avail only grows
+                bound = _expiry_bound()
+                while window_heap and window_heap[0][0] <= bound:
+                    heappop(window_heap)
+                xfer_starts = sorted(s for (_, s) in window_heap)
+                xfer_ends = sorted(e for (e, _) in window_heap)
+                compact_at = max(64, 2 * len(window_heap))
+            iface_time_total += full * factor
+            t = end
+        else:
+            iface_time_total += full
+        comp = comp_s[nm]
+        events.append(Event(worker_names[w], nm, t, comp, "compute",
+                            op.phase))
+        t += comp
+        avail[w] = t
+        # collective traffic serializes on the ICI lane (operand-sum
+        # metric, matching the closed-form breakdown; the ring-model
+        # wire bytes feed the roofline collective term instead)
+        if op.collective_bytes > 0.0:
+            c0 = ici_free if ici_free > t else t
+            cdur = op.collective_bytes / config.ici_bw
+            events.append(Event("ici", f"{nm}:coll", c0, cdur, "collective",
+                                op.phase))
+            ici_free = c0 + cdur
+            t = c0 + cdur
+        done[nm] = t
+        scheduled += 1
+        for cn in consumers.get(nm, ()):
+            n_waiting[cn] -= 1
+            if n_waiting[cn] == 0:
+                next_wave.append((-comp_s[cn], seq, cn))
+                seq += 1
+        if not heap and next_wave:
+            heap = next_wave
+            heapify(heap)
+            next_wave = []
     if scheduled != len(program.ops):
         raise ValueError("dependency cycle in program")
+    return tl, iface_time_total, transfer_energy
 
-    host_floor = config.host_floor_s if host_s is None else host_s
-    makespan = tl.makespan
-    totals = program.totals()
-    bd = report.breakdown_from_events(tl.events, host_floor_s=host_floor)
+
+# ---------------------------------------------------------------------------
+# linear-chain fast path: the whole schedule is one prefix sum
+
+
+def _run_chain(program: Program,
+               config: EngineConfig
+               ) -> Optional[Tuple[Timeline, float, float, float,
+                                   Dict[str, float]]]:
+    """Vectorized executor for pure chains — bit-identical to the event
+    loop.  On a chain every op starts exactly when its predecessor's chain
+    time ends (worker/host/ICI lanes can never push it later), so the
+    schedule is the prefix sum of the interleaved per-op
+    (host, transfer, compute, collective) durations, in the exact addition
+    order of the loop.  Costs are computed with the same IEEE operations
+    as the scalar interface models.  Returns None to fall back when an op
+    carries a cost the vectorized model can't mirror (negative/non-finite).
+    """
+    import numpy as np
+
+    ops = program.ops
+    m = len(ops)
+    em = config.energy
+    peak = config.peak_flops
+
+    flops = np.array([op.flops for op in ops], dtype=np.float64)
+    dot = np.array([op.dot_flops for op in ops], dtype=np.float64)
+    nb = np.array([op.bytes_in + op.bytes_out for op in ops],
+                  dtype=np.float64)
+    coll = np.array([op.collective_bytes for op in ops], dtype=np.float64)
+    has_dur = np.array([op.duration_s is not None for op in ops], dtype=bool)
+    dur = np.array([op.duration_s or 0.0 for op in ops], dtype=np.float64)
+    has_tov = np.array([op.transfer_s is not None for op in ops], dtype=bool)
+    tov = np.array([op.transfer_s or 0.0 for op in ops], dtype=np.float64)
+
+    with np.errstate(divide="ignore", invalid="ignore"):
+        comp = np.where(has_dur, dur, flops / peak)
+
+        # interface time/energy for the bytes path — same formulas, same
+        # operation order as core.interfaces / EnergyModel, elementwise
+        iface = config.interface
+        if iface == "hbm":
+            t_if = nb / config.hbm_bw
+            e_if = (nb * em.pj_per_byte_hbm) * 1e-12
+        elif iface == "ideal":
+            t_if = np.zeros(m)
+            e_if = np.zeros(m)
+        elif iface == "dma":
+            from repro.core.interfaces import DMA_LAUNCH_S, FLUSH_PER_BYTE
+            n_tr = np.maximum(1.0,
+                              np.floor_divide(nb, config.dma_transfer_bytes))
+            t_if = (2 * nb / config.hbm_bw + n_tr * DMA_LAUNCH_S
+                    + nb * FLUSH_PER_BYTE)
+            e_if = ((2 * nb) * em.pj_per_byte_hbm) * 1e-12 \
+                + ((nb * 0.05) * em.pj_per_byte_host) * 1e-12
+        elif iface == "acp":
+            res_frac = np.where(nb < config.vmem_resident_bytes, 1.0, 0.5)
+            spill = nb * (1.0 - res_frac)
+            t_if = (nb * res_frac) / config.vmem_bw \
+                + 2 * spill / config.hbm_bw
+            e_if = ((2 * nb * res_frac) * em.pj_per_byte_vmem) * 1e-12 \
+                + ((2 * spill) * em.pj_per_byte_hbm) * 1e-12
+        else:                               # registered custom interface
+            return None
+        t_if = t_if / config.datapath_scale
+        if config.overlap:
+            expo_if = np.maximum(t_if - dot / peak, 0.0)
+        else:
+            expo_if = t_if
+
+        zero_b = nb == 0.0
+        full = np.where(has_tov, tov, np.where(zero_b, 0.0, t_if))
+        expo = np.where(has_tov, tov, np.where(zero_b, 0.0, expo_if))
+        xe = np.where(has_tov, ((tov * config.hbm_bw) * em.pj_per_byte_hbm)
+                      * 1e-12, np.where(zero_b, 0.0, e_if))
+
+        # chain transfers never overlap -> every window sees live == 1
+        if config.hbm_ports <= 0:
+            factor = 1.0
+        else:
+            factor = max(1.0, 1 / config.hbm_ports)
+        has_x = expo > 0.0
+        xfer = np.where(has_x, expo * factor, 0.0)
+
+        if config.host_bw:
+            hc = config.host_dispatch_s + (nb / config.host_bw) \
+                / config.host_threads
+        else:
+            hc = np.full(m, config.host_dispatch_s)
+    has_h = hc > 0.0
+    has_c = coll > 0.0
+    cdur = np.where(has_c, coll / config.ici_bw, 0.0)
+
+    flat = np.empty(4 * m, dtype=np.float64)
+    flat[0::4] = np.where(has_h, hc, 0.0)
+    flat[1::4] = xfer
+    flat[2::4] = comp
+    flat[3::4] = cdur
+    if not np.isfinite(flat).all() or (m and flat.min() < 0.0):
+        return None                         # event loop handles the exotic
+    # itertools.accumulate guarantees the loop's strict left-to-right float
+    # addition order (numpy reductions may re-associate)
+    cum = list(accumulate(flat.tolist()))
+
+    # worker labels: timing is worker-independent on a chain, but the
+    # argmin assignment (ties -> lowest index) must be replayed for
+    # bit-identical event rows
+    n = max(config.n_workers, 1)
+    if n == 1:
+        widx = [0] * m
+    else:
+        avail = [0.0] * n
+        rng = range(n)
+        widx = []
+        for i in range(m):
+            w = min(rng, key=avail.__getitem__)
+            avail[w] = cum[4 * i + 2]       # end of this op's compute
+            widx.append(w)
+    worker_names = [f"acc{i}" for i in range(n)]
+
+    tl = Timeline()
+    events = tl.events
+    hc_l, xfer_l, comp_l, cdur_l = (hc.tolist(), xfer.tolist(),
+                                    comp.tolist(), cdur.tolist())
+    hh, hx, hcoll = has_h.tolist(), has_x.tolist(), has_c.tolist()
+    for i in range(m):
+        op = ops[i]
+        b = 4 * i
+        wname = worker_names[widx[i]]
+        if hh[i]:
+            events.append(Event("host", f"{op.name}:dispatch",
+                                cum[b - 1] if i else 0.0, hc_l[i], "host",
+                                op.phase))
+        if hx[i]:
+            events.append(Event(wname, f"{op.name}:xfer", cum[b], xfer_l[i],
+                                "transfer", op.phase))
+        events.append(Event(wname, op.name, cum[b + 1], comp_l[i],
+                            "compute", op.phase))
+        if hcoll[i]:
+            events.append(Event("ici", f"{op.name}:coll", cum[b + 2],
+                                cdur_l[i], "collective", op.phase))
+
+    # sequential accumulations (match the loop's += order exactly: within
+    # each kind, event order == op order, so per-kind running sums are the
+    # same float additions ``report.aggregate`` would perform)
+    iface_time_total = 0.0
+    for v in np.where(has_x, full * factor, full).tolist():
+        iface_time_total += v
+    transfer_energy = 0.0
+    for v in xe.tolist():
+        transfer_energy += v
+    kinds: Dict[str, float] = {}
+    acc = 0.0
+    for v in comp_l:
+        acc += v
+    kinds["compute"] = acc
+    if any(hx):
+        acc = 0.0
+        for i, v in enumerate(xfer_l):
+            if hx[i]:
+                acc += v
+        kinds["transfer"] = acc
+    if any(hh):
+        acc = 0.0
+        for i, v in enumerate(hc_l):
+            if hh[i]:
+                acc += v
+        kinds["host"] = acc
+    if any(hcoll):
+        acc = 0.0
+        for i, v in enumerate(cdur_l):
+            if hcoll[i]:
+                acc += v
+        kinds["collective"] = acc
+    # every event boundary is a prefix-sum entry and the chain is monotone,
+    # so the last entry IS max(event.end) — no O(E) rescan needed
+    makespan = cum[-1] if cum else 0.0
+    return tl, iface_time_total, transfer_energy, makespan, kinds
+
+
+# ---------------------------------------------------------------------------
+# shared result assembly
+
+
+def _finalize(tl: Timeline, program: Program, config: EngineConfig,
+              plan: Plan, iface_time_total: float, transfer_energy: float,
+              model_flops: float, host_floor: float, *,
+              makespan: Optional[float] = None,
+              kinds: Optional[Dict[str, float]] = None) -> EngineResult:
+    if makespan is None:
+        makespan = tl.makespan
+    totals = plan.totals if plan.totals else program.totals()
+    if kinds is None:
+        bd = report.breakdown_from_events(tl.events, host_floor_s=host_floor)
+    else:
+        bd = report.Breakdown(
+            accelerator_s=kinds.get("compute", 0.0),
+            transfer_s=kinds.get("transfer", 0.0),
+            host_s=kinds.get("host", 0.0) + host_floor,
+            collective_s=kinds.get("collective", 0.0))
     if config.overlap:
         # the Fig-1 transfer phase applies the dot-hiding budget at the
         # aggregate level (like the closed form): memory time beyond the
         # program's total MXU time is exposed.  The timeline keeps the
         # per-op view; per-op exposure can only exceed this (Jensen).
         bd.transfer_s = max(
-            iface_time_total[0] - totals["dot_flops"] / config.peak_flops,
+            iface_time_total - totals["dot_flops"] / config.peak_flops,
             0.0)
     rl = report.roofline_from_totals(
         totals, host_s=host_floor, n_chips=config.n_chips,

@@ -14,6 +14,8 @@ Three lowerings produce ``Program``s:
   from_hlo    an ``analyze_hlo`` cost dict -> a chain of uniform macro-ops
               that preserves every aggregate exactly (the compiled module is
               already fused; per-instruction structure is gone),
+  from_decode a ``ModelConfig`` -> token-by-token autoregressive decode
+              chain (weight streaming + growing KV re-reads per token),
   from_tasks  legacy ``TileTask`` lists (scheduler compat).
 """
 from __future__ import annotations
@@ -212,6 +214,60 @@ def from_hlo(hlo: Dict, n_ops: int = 8, name: str = "") -> Program:
             phase="step"))
     return Program(ops, name=name or hlo.get("entry", "hlo"), source="hlo",
                    meta={"n_ops": n_ops})
+
+
+# ---------------------------------------------------------------------------
+# lowering 2b: autoregressive decode -> per-token macro-op chain
+
+
+def from_decode(cfg, n_tokens: int, *, seq_len: int = 1024, batch: int = 1,
+                ops_per_token: int = 8, bytes_per_param: float = 2.0,
+                name: str = "") -> Program:
+    """Lower token-by-token decode of a ``ModelConfig`` to a chain Program.
+
+    Every generated token streams the full (active) weight set and re-reads
+    a KV cache that grows with position — the canonical memory-bound serial
+    workload (and, at several ops per token over hundreds of tokens, the
+    multi-thousand-op chain that stresses the executor).  Token ``t`` is
+    ``ops_per_token`` uniform macro-op slices chained back-to-back, phase
+    ``tok<t>``; aggregates follow the ``core.simulator.model_flops`` decode
+    accounting (2·N_active per token plus the KV re-read term).
+    """
+    n_tokens = max(int(n_tokens), 1)
+    ops_per_token = max(int(ops_per_token), 1)
+    n_active = float(cfg.active_param_count())
+    kv_dim = 0.0
+    n_attn_layers = 0
+    if getattr(cfg, "n_kv_heads", 0) and getattr(cfg, "family", "") != "ssm":
+        kv_dim = float(cfg.n_kv_heads * cfg.resolved_head_dim)
+        n_attn_layers = (cfg.n_layers // cfg.hybrid_attn_every
+                         if cfg.family == "hybrid" else cfg.n_layers)
+    weight_bytes = n_active * bytes_per_param
+    ops: List[CostedOp] = []
+    prev: Optional[str] = None
+    for t in range(n_tokens):
+        pos = seq_len + t
+        flops = 2.0 * n_active * batch \
+            + 4.0 * n_attn_layers * kv_dim * pos * batch
+        kv_bytes = 2.0 * n_attn_layers * kv_dim * pos * bytes_per_param \
+            * batch
+        bytes_in = weight_bytes + kv_bytes
+        bytes_out = kv_dim * n_attn_layers * bytes_per_param * batch
+        for k in range(ops_per_token):
+            nm = f"tok{t}/s{k}"
+            ops.append(CostedOp(
+                name=nm,
+                flops=flops / ops_per_token,
+                dot_flops=flops / ops_per_token,
+                bytes_in=bytes_in / ops_per_token,
+                bytes_out=bytes_out / ops_per_token,
+                deps=(prev,) if prev else (),
+                phase=f"tok{t}"))
+            prev = nm
+    return Program(ops, name=name or f"{getattr(cfg, 'name', 'model')}"
+                   f"/decode{n_tokens}", source="decode",
+                   meta={"n_tokens": n_tokens, "seq_len": seq_len,
+                         "batch": batch, "ops_per_token": ops_per_token})
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,163 @@
+"""Frozen pre-refactor executor — the PR-base event loop, kept verbatim.
+
+This is the quadratic pure-Python loop that ``repro.sim.engine.run`` shipped
+with before the O(E log E) rewrite (per-wave ``ready.sort`` + list rebuild,
+``contention_factor`` scanning every historical transfer window, per-op
+closure work inside the loop).  It is retained under ``tests/`` as the
+ground truth for the equivalence suite: the heap-based engine and the
+linear-chain fast path must produce bit-identical Timeline / Breakdown /
+Roofline / energy on every program.
+
+Interface models, ``EngineConfig`` and ``EngineResult`` are imported from
+the live engine so the *scheduling* semantics are what is frozen here, not
+the hardware constants.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.timeline import Timeline
+from repro.sim import report
+from repro.sim.engine import INTERFACES, EngineConfig, EngineResult
+from repro.sim.ir import CostedOp, Program
+
+
+def run_reference(program: Program, config: EngineConfig = EngineConfig(),
+                  *, model_flops: float = 0.0,
+                  host_s: Optional[float] = None) -> EngineResult:
+    """The pre-refactor ``engine.run`` loop, byte-for-byte."""
+    if config.interface not in INTERFACES:
+        raise ValueError(f"unknown interface {config.interface!r}; "
+                         f"one of {sorted(INTERFACES)}")
+    iface = INTERFACES[config.interface]
+    tl = Timeline()
+    n = max(config.n_workers, 1)
+    avail = [0.0] * n
+    affinity_worker: Dict[str, int] = {}
+    done: Dict[str, float] = {}
+    host_free = 0.0
+    ici_free = 0.0
+    transfers: List[Tuple[float, float]] = []   # active (start, end) windows
+    transfer_energy = 0.0
+    iface_time_total = [0.0]    # full interface seconds charged this run
+
+    # dependency bookkeeping
+    ops = {op.name: op for op in program.ops}
+    n_waiting = {op.name: sum(1 for d in op.deps if d in ops)
+                 for op in program.ops}
+    consumers: Dict[str, List[str]] = {}
+    for op in program.ops:
+        for d in op.deps:
+            if d in ops:
+                consumers.setdefault(d, []).append(op.name)
+    ready = [op.name for op in program.ops if n_waiting[op.name] == 0]
+    if not ready and program.ops:
+        raise ValueError("dependency cycle in program")
+    scheduled = 0
+
+    def op_compute_s(op: CostedOp) -> float:
+        if op.duration_s is not None:
+            return op.duration_s
+        return op.flops / config.peak_flops
+
+    def op_transfer_base(op: CostedOp) -> Tuple[float, float, float]:
+        if op.transfer_s is not None:
+            return op.transfer_s, op.transfer_s, config.energy.hbm(
+                op.transfer_s * config.hbm_bw)
+        if not op.bytes:
+            return 0.0, 0.0, 0.0
+        t, e = iface(op.bytes, config)
+        t /= config.datapath_scale
+        exposed = (max(t - op.dot_flops / config.peak_flops, 0.0)
+                   if config.overlap else t)
+        return t, exposed, e
+
+    def contention_factor(start: float) -> float:
+        if config.hbm_ports <= 0:
+            return 1.0
+        live = 1 + sum(1 for (s, e) in transfers if s <= start < e)
+        return max(1.0, live / config.hbm_ports)
+
+    while ready:
+        # LPT among currently-ready ops (the legacy scheduler heuristic)
+        ready.sort(key=lambda nm: -op_compute_s(ops[nm]))
+        batch, ready = ready, []
+        for nm in batch:
+            op = ops[nm]
+            if op.affinity is not None and op.affinity in affinity_worker:
+                w = affinity_worker[op.affinity]
+            else:
+                w = min(range(n), key=lambda i: avail[i])
+                if op.affinity is not None:
+                    affinity_worker[op.affinity] = w
+            dep_ready = max((done[d] for d in op.deps if d in done),
+                            default=0.0)
+            t = max(avail[w], dep_ready)
+            # serial host dispatch (framework time) gates the launch
+            host_cost = (config.host_dispatch_s
+                         + (op.bytes / config.host_bw / config.host_threads
+                            if config.host_bw else 0.0))
+            if host_cost > 0.0:
+                h0 = max(host_free, dep_ready)
+                tl.add("host", f"{op.name}:dispatch", h0, host_cost, "host",
+                       phase=op.phase)
+                host_free = h0 + host_cost
+                t = max(t, host_free)
+            # staged input transfer, with HBM-port contention
+            full, xfer, xe = op_transfer_base(op)
+            transfer_energy += xe
+            if xfer > 0.0:
+                factor = contention_factor(t)
+                xfer *= factor
+                tl.add(f"acc{w}", f"{op.name}:xfer", t, xfer, "transfer",
+                       phase=op.phase)
+                transfers.append((t, t + xfer))
+                iface_time_total[0] += full * factor
+                t += xfer
+            else:
+                iface_time_total[0] += full
+            comp = op_compute_s(op)
+            tl.add(f"acc{w}", op.name, t, comp, "compute", phase=op.phase)
+            t += comp
+            avail[w] = t
+            if op.collective_bytes > 0.0:
+                c0 = max(ici_free, t)
+                cdur = op.collective_bytes / config.ici_bw
+                tl.add("ici", f"{op.name}:coll", c0, cdur, "collective",
+                       phase=op.phase)
+                ici_free = c0 + cdur
+                t = c0 + cdur
+            done[nm] = t
+            scheduled += 1
+            for cn in consumers.get(nm, ()):
+                n_waiting[cn] -= 1
+                if n_waiting[cn] == 0:
+                    ready.append(cn)
+    if scheduled != len(program.ops):
+        raise ValueError("dependency cycle in program")
+
+    host_floor = config.host_floor_s if host_s is None else host_s
+    makespan = tl.makespan
+    totals = program.totals()
+    bd = report.breakdown_from_events(tl.events, host_floor_s=host_floor)
+    if config.overlap:
+        bd.transfer_s = max(
+            iface_time_total[0] - totals["dot_flops"] / config.peak_flops,
+            0.0)
+    rl = report.roofline_from_totals(
+        totals, host_s=host_floor, n_chips=config.n_chips,
+        model_flops=model_flops, peak_flops=config.peak_flops,
+        hbm_bw=config.hbm_bw, ici_bw=config.ici_bw)
+    e_comp = config.energy.compute(totals["flops"])
+    e_ici = config.energy.ici(totals["collective_bytes"])
+    e_static = config.energy.static(makespan + host_floor, 1)
+    energy = {
+        "compute_j": e_comp, "hbm_j": transfer_energy, "ici_j": e_ici,
+        "static_j": e_static,
+        "total_j": e_comp + transfer_energy + e_ici + e_static,
+        "total_j_all_chips": (e_comp + transfer_energy + e_ici + e_static)
+        * config.n_chips,
+    }
+    return EngineResult(timeline=tl, program=program, config=config,
+                        breakdown=bd, roofline=rl, energy=energy,
+                        makespan=makespan)

@@ -1,0 +1,114 @@
+"""The sweep layer: shared plans, memoized lowerings, executors, records."""
+import dataclasses
+
+import pytest
+
+from repro.apps.paper_graphs import build_paper_graph
+from repro.configs.paper_nets import PAPER_NETS
+from repro.sim import engine, ir
+from repro.sim.sweep import (as_records, clear_caches, lower_graph,
+                             lower_hlo, sweep)
+
+HLO = {"flops": 1e15, "dot_flops": 9e14, "bytes": 1e12,
+       "collective_bytes": 1e10, "wire_bytes": 1.5e10,
+       "transcendentals": 1e9, "collectives": {}, "n_while": 1,
+       "custom_calls": {}}
+
+CONFIGS = [
+    engine.EngineConfig(n_workers=1, interface="dma"),
+    engine.EngineConfig(n_workers=4, interface="acp", hbm_ports=2),
+    engine.EngineConfig(n_workers=8, interface="hbm", hbm_ports=4,
+                        host_dispatch_s=1e-6),
+]
+
+
+def _identical(a, b):
+    assert a.makespan == b.makespan
+    assert a.breakdown == b.breakdown
+    assert a.energy == b.energy
+    assert a.timeline.events == b.timeline.events
+
+
+def test_sweep_matches_individual_runs():
+    g = build_paper_graph(PAPER_NETS["lenet5"], batch=1)
+    prog = ir.from_graph(g, batch=1, max_tile_elems=2048)
+    results = sweep(prog, CONFIGS)
+    assert len(results) == len(CONFIGS)
+    for cfg, res in zip(CONFIGS, results):
+        assert res.config is cfg
+        _identical(res, engine.run(prog, cfg))
+
+
+@pytest.mark.parametrize("executor", ["serial", "thread", "process"])
+def test_sweep_executors_agree(executor):
+    prog = ir.from_hlo(HLO, n_ops=16)
+    base = sweep(prog, CONFIGS, executor="serial")
+    other = sweep(prog, CONFIGS, executor=executor)
+    for a, b in zip(base, other):
+        _identical(a, b)
+
+
+def test_sweep_empty_and_bad_executor():
+    prog = ir.from_hlo(HLO, n_ops=2)
+    assert sweep(prog, []) == []
+    with pytest.raises(ValueError):
+        sweep(prog, CONFIGS, executor="carrier-pigeon")
+
+
+def test_lower_graph_memoizes_on_identity_and_params():
+    clear_caches()
+    g = build_paper_graph(PAPER_NETS["lenet5"], batch=1)
+    p1 = lower_graph(g, batch=1, max_tile_elems=2048)
+    p2 = lower_graph(g, batch=1, max_tile_elems=2048)
+    assert p1 is p2                       # cache hit
+    p3 = lower_graph(g, batch=1, max_tile_elems=4096)
+    assert p3 is not p1                   # tile params are part of the key
+    p4 = lower_graph(g, batch=4, max_tile_elems=2048)
+    assert p4 is not p1                   # batch is part of the key
+    g2 = build_paper_graph(PAPER_NETS["lenet5"], batch=1)
+    assert lower_graph(g2, 1, 2048) is not p1   # different graph object
+
+
+def test_lower_hlo_memoizes_on_content():
+    clear_caches()
+    p1 = lower_hlo(HLO, n_ops=8)
+    assert lower_hlo(dict(HLO), n_ops=8) is p1      # equal content hits
+    assert lower_hlo(HLO, n_ops=4) is not p1
+    assert lower_hlo(dict(HLO, flops=2e15), n_ops=8) is not p1
+
+
+def test_as_records_is_tidy():
+    prog = ir.from_hlo(HLO, n_ops=4)
+    rows = as_records(sweep(prog, CONFIGS))
+    assert len(rows) == len(CONFIGS)
+    for row, cfg in zip(rows, CONFIGS):
+        assert row["interface"] == cfg.interface
+        assert row["n_workers"] == cfg.n_workers
+        assert row["makespan_s"] > 0
+        assert set(row) >= {"program", "n_ops", "makespan_s", "transfer_s",
+                            "total_j", "utilization", "bound"}
+
+
+def test_utilization_counts_provisioned_workers():
+    """A worker that never receives an op still dilutes utilization: one
+    1 ms op on an 8-worker config is 1/8 utilized, not 100%."""
+    prog = ir.Program([ir.CostedOp("only", duration_s=1e-3)])
+    res = engine.run(prog, engine.EngineConfig(n_workers=8))
+    assert res.utilization() == pytest.approx(1.0 / 8.0)
+    assert res.utilization("acc0") == pytest.approx(1.0)
+    # saturated single worker stays 1.0
+    res1 = engine.run(prog, engine.EngineConfig(n_workers=1))
+    assert res1.utilization() == pytest.approx(1.0)
+
+
+def test_from_decode_shape_and_seriality():
+    from repro.configs.gemma_2b import SMOKE
+    prog = ir.from_decode(SMOKE, n_tokens=12, ops_per_token=4)
+    assert len(prog.ops) == 48
+    assert engine.prepare(prog).is_chain
+    # KV growth: later tokens read strictly more bytes
+    first = sum(op.bytes_in for op in prog.ops[:4])
+    last = sum(op.bytes_in for op in prog.ops[-4:])
+    assert last > first
+    res = engine.run(prog, engine.EngineConfig())
+    assert res.makespan > 0

@@ -21,4 +21,8 @@ fi
 python -m benchmarks.run --only multiacc
 python -m benchmarks.run --only interfaces
 
+# perf smoke: engine/sweep timings must stay within 2x of the budgets
+# recorded in BENCH_engine.json (fails the build on >2x regression)
+python -m benchmarks.bench_engine_perf --quick
+
 echo "CI OK"
