@@ -1,0 +1,100 @@
+"""Serving study: batching policy x arrival rate on a trace-driven load.
+
+The end-to-end scenario the paper argues per-layer models miss, scaled to
+a served workload: Poisson request traces against gemma-2b, three batching
+policies (static / dynamic max-wait / continuous per-token batching) over
+three arrival rates, all through ``repro.sim.serving`` and the engine's
+sweep layer.  Reports TTFT p50/p99, TPOT p50, throughput and decode-slot
+occupancy per cell; the headline derived value is the continuous-vs-static
+throughput gain at the highest (saturating) rate.
+
+``python -m benchmarks.bench_serving`` additionally records the full grid
+in ``BENCH_serving.json`` at the repo root (``BENCH_engine.json`` style),
+so the numbers are diffable across PRs.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+from repro.configs.gemma_2b import FULL as GEMMA_2B
+from repro.serve.policy import get_policy
+from repro.sim.engine import EngineConfig
+from repro.sim.report import row
+from repro.sim.serving import as_serving_records, serving_sweep
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+BENCH_JSON = ROOT / "BENCH_serving.json"
+
+POLICIES = [get_policy("static", max_batch=8),
+            get_policy("dynamic", max_batch=8, max_wait_s=0.010),
+            get_policy("continuous", max_batch=8)]
+RATES_RPS = [10.0, 50.0, 200.0]
+N_REQUESTS = 64
+# host_dispatch_s models the per-step framework overhead the paper's Fig 1
+# measures around the accelerator; it hits many-small-step schedules harder
+CONFIG = EngineConfig(n_workers=1, interface="hbm", hbm_ports=4,
+                      host_dispatch_s=50e-6)
+
+
+def _grid():
+    return serving_sweep(GEMMA_2B, POLICIES, RATES_RPS,
+                         n_requests=N_REQUESTS, config=CONFIG, seed=0)
+
+
+def _rows(results):
+    rows = []
+    by_cell = {}
+    for res in results:
+        s = res.stats()
+        rate = res.meta["rate_rps"]
+        by_cell[(res.policy.kind, rate)] = res
+        rows.append(row(
+            f"serving/{res.policy.kind}@{rate:g}rps", s["makespan_s"],
+            f"thru={s['throughput_tok_s']:.0f}tok/s "
+            f"ttft_p50={s['ttft_p50']*1e3:.1f}ms "
+            f"ttft_p99={s['ttft_p99']*1e3:.1f}ms "
+            f"tpot_p50={s['tpot_p50']*1e3:.2f}ms "
+            f"occ={s['occupancy']:.2f} steps={s['n_steps']:.0f}"))
+    top = max(RATES_RPS)
+    cont = by_cell[("continuous", top)].throughput_tok_s
+    stat = by_cell[("static", top)].throughput_tok_s
+    rows.append(row(
+        f"serving/continuous_vs_static@{top:g}rps",
+        by_cell[("continuous", top)].makespan_s,
+        f"throughput_gain={cont/stat:.2f}x "
+        f"({cont:.0f} vs {stat:.0f} tok/s; continuous must win at "
+        f"saturation)"))
+    return rows
+
+
+def run(emit=print):
+    """benchmarks.run driver entry: the policy x rate grid as CSV rows."""
+    return _rows(_grid())
+
+
+def main():
+    t0 = time.time()
+    results = _grid()
+    for r in _rows(results):
+        print(f"{r['name']},{r['us_per_call']},\"{r['derived']}\"")
+    out = {
+        "model": GEMMA_2B.name,
+        "n_requests": N_REQUESTS,
+        "config": {"interface": CONFIG.interface,
+                   "host_dispatch_s": CONFIG.host_dispatch_s,
+                   "hbm_ports": CONFIG.hbm_ports},
+        "grid": as_serving_records(results),
+        "recorded": time.strftime("%Y-%m-%d"),
+        "elapsed_s": round(time.time() - t0, 3),
+        "note": "policy x arrival-rate serving sweep "
+                "(benchmarks/bench_serving.py); regenerate with "
+                "`PYTHONPATH=src python -m benchmarks.bench_serving`",
+    }
+    BENCH_JSON.write_text(json.dumps(out, indent=2) + "\n")
+    print(f"wrote {BENCH_JSON}")
+
+
+if __name__ == "__main__":
+    main()

@@ -21,6 +21,7 @@ MODULES = [
     ("timeline", "Fig 14 — utilization timeline"),
     ("camera", "Fig 19/20 — camera vision pipeline"),
     ("roofline", "§Roofline — per-cell roofline terms"),
+    ("serving", "serving — trace-driven batching policy x arrival rate"),
     ("engine_perf", "infra — executor scaling (small/medium/5k-op sweep)"),
 ]
 

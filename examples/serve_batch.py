@@ -1,40 +1,45 @@
-"""Batched serving example: prefill a batch of prompts, then decode with a
-shared KV cache — greedy continuation of synthetic prompts.
+"""Batched serving example — measured and modeled in one script.
+
+Default mode runs the real JAX path: prefill a batch of prompts, then
+greedy decode with a shared KV cache.  ``--simulate`` replays a synthetic
+request trace against the same batching policy through the serving
+simulator (``repro.sim.serving``) instead — the scenario analogue of
+``examples/camera_pipeline.py``'s measured-ISP + modeled-DNN split.  Both
+modes share the ``repro.serve.policy`` dataclasses: the measured batch is
+sized by ``policy.max_batch``; the simulator replays the full admission /
+eviction semantics.
 
   PYTHONPATH=src python examples/serve_batch.py --arch gemma3_1b --tokens 16
+  PYTHONPATH=src python examples/serve_batch.py --simulate \\
+      --policy continuous --rate 50 --requests 64
 """
 import argparse
 import time
 
-import jax
-import jax.numpy as jnp
-import numpy as np
 
-from repro.configs import get_smoke_config
-from repro.models import transformer as T
-from repro.serve import make_decode_step
+def run_measured(args):
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
 
+    from repro.configs import get_smoke_config
+    from repro.models import transformer as T
+    from repro.serve import get_policy, make_decode_step
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="gemma3_1b")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--tokens", type=int, default=16)
-    args = ap.parse_args()
-
+    policy = get_policy(args.policy, max_batch=args.batch)
     cfg = get_smoke_config(args.arch)
     params, _ = T.init_params(cfg, jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
+    batch_n = policy.max_batch
     prompts = jnp.asarray(rng.integers(
-        0, cfg.vocab, (args.batch, args.prompt_len)), jnp.int32)
+        0, cfg.vocab, (batch_n, args.prompt_len)), jnp.int32)
     batch = {"tokens": prompts}
     if cfg.family == "encdec":
         batch["frames"] = jnp.ones(
-            (args.batch, cfg.encoder.n_ctx, cfg.d_model), jnp.float32) * .1
+            (batch_n, cfg.encoder.n_ctx, cfg.d_model), jnp.float32) * .1
     if cfg.family == "vlm":
         batch["patches"] = jnp.ones(
-            (args.batch, cfg.n_patches, cfg.d_model), jnp.float32) * .1
+            (batch_n, cfg.n_patches, cfg.d_model), jnp.float32) * .1
 
     max_seq = args.prompt_len + cfg.n_patches + args.tokens
     t0 = time.time()
@@ -42,7 +47,7 @@ def main():
         lambda p, b: T.prefill_forward(cfg, p, b, max_seq=max_seq)
     )(params, batch)
     tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
-    print(f"prefill {args.batch}x{args.prompt_len} in {time.time()-t0:.2f}s")
+    print(f"prefill {batch_n}x{args.prompt_len} in {time.time()-t0:.2f}s")
 
     decode = jax.jit(make_decode_step(cfg), donate_argnums=(1,))
     out = [tok]
@@ -55,8 +60,61 @@ def main():
     dt = time.time() - t0
     gen = jnp.concatenate(out, axis=1)
     print(f"decoded {args.tokens-1} steps in {dt:.2f}s "
-          f"({args.batch*(args.tokens-1)/max(dt,1e-9):.1f} tok/s)")
+          f"({batch_n*(args.tokens-1)/max(dt,1e-9):.1f} tok/s)")
     print("generated ids:\n", np.asarray(gen))
+
+
+def run_simulated(args):
+    from repro.apps.serving import serve_trace
+
+    # model the same reduced config the measured mode runs (--full for the
+    # registry's full-size config), so the two modes stay comparable
+    res = serve_trace(args.arch, args.policy, rate_rps=args.rate,
+                      n_requests=args.requests, max_batch=args.batch,
+                      seed=args.seed, smoke=not args.full)
+    s = res.stats()
+    print(f"simulated {args.requests} requests @ {args.rate:g} req/s on "
+          f"{args.arch}{'' if args.full else ' (smoke config)'} "
+          f"({args.policy} batching, max_batch={args.batch}):")
+    print(f"  wall {s['makespan_s']:.3f}s "
+          f"(engine busy {res.engine.makespan:.3f}s), "
+          f"{s['n_steps']:.0f} scheduler steps")
+    print(f"  throughput {s['throughput_tok_s']:.0f} tok/s "
+          f"({s['throughput_req_s']:.1f} req/s), "
+          f"occupancy {s['occupancy']:.2f}")
+    print(f"  TTFT p50/p99 {s['ttft_p50']*1e3:.4g}/{s['ttft_p99']*1e3:.4g} "
+          f"ms, TPOT p50 {s['tpot_p50']*1e3:.4g} ms")
+    b = res.engine.breakdown.fractions()
+    print(f"  breakdown: accel {b['accelerator']*100:.0f}% / transfer "
+          f"{b['transfer']*100:.0f}% / host {b['host']*100:.0f}%")
+    print(res.wall_timeline().ascii(width=64))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3_1b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--tokens", type=int, default=16)
+    ap.add_argument("--policy", default="static",
+                    choices=["static", "dynamic", "continuous"])
+    ap.add_argument("--simulate", action="store_true",
+                    help="replay a synthetic trace through the serving "
+                         "simulator instead of running the JAX path")
+    ap.add_argument("--rate", type=float, default=50.0,
+                    help="(simulate) arrival rate, requests/s")
+    ap.add_argument("--requests", type=int, default=64,
+                    help="(simulate) trace length")
+    ap.add_argument("--full", action="store_true",
+                    help="(simulate) model the full-size registry config "
+                         "instead of the smoke config the measured mode "
+                         "runs")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    if args.simulate:
+        run_simulated(args)
+    else:
+        run_measured(args)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,43 @@
+"""Serving scenario app: one call from an architecture id to a simulated
+served workload.
+
+The apps layer composes scenario pieces the way ``apps.camera`` composes
+the ISP with a DNN program: here the pieces are a ``ModelConfig`` from the
+registry, a synthetic trace generator, a batching policy, and the serving
+co-simulation — ``examples/serve_batch.py --simulate`` and ad-hoc DSE
+scripts call this instead of wiring the four by hand.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Union
+
+from repro.serve.policy import BatchingPolicy, get_policy
+from repro.sim.engine import EngineConfig
+from repro.sim.serving import (TRACE_GENERATORS, ServingResult,
+                               simulate_serving)
+
+
+def serve_trace(arch: str = "gemma_2b",
+                policy: Union[str, BatchingPolicy] = "continuous", *,
+                rate_rps: float = 50.0, n_requests: int = 64,
+                max_batch: int = 8, trace_kind: str = "poisson",
+                seed: int = 0, smoke: bool = False,
+                config: Optional[EngineConfig] = None,
+                prompt_len=(16, 128), output_len=(8, 64)) -> ServingResult:
+    """Simulate serving ``arch`` under a policy and a synthetic trace.
+
+    ``policy`` is a name (``static`` | ``dynamic`` | ``continuous``) or a
+    ready ``BatchingPolicy``; ``smoke`` selects the reduced registry config
+    (useful when the full model's weights would dwarf the trace).  Returns
+    the full ``ServingResult``; ``result.stats()`` has the TTFT/TPOT/
+    throughput summary.
+    """
+    from repro.configs import get_config, get_smoke_config
+    cfg = get_smoke_config(arch) if smoke else get_config(arch)
+    if isinstance(policy, str):
+        policy = get_policy(policy, max_batch=max_batch)
+    gen = TRACE_GENERATORS[trace_kind]
+    trace = gen(n_requests, rate_rps, prompt_len=prompt_len,
+                output_len=output_len, seed=seed)
+    return simulate_serving(cfg, trace, policy,
+                            config or EngineConfig(), name=f"{arch}/serve")

@@ -1,1 +1,20 @@
-from repro.serve.step import make_decode_step, make_prefill_step  # noqa: F401
+"""Serving layer: real JAX prefill/decode steps (``repro.serve.step``) and
+the batching policies (``repro.serve.policy``) shared with the simulated
+serving scenario in ``repro.sim.serving``.
+
+The step factories are re-exported lazily: ``repro.serve.step`` imports
+JAX and the model stack, while the policy dataclasses are dependency-free
+— the simulator must be able to import them without paying for (or even
+having) JAX.
+"""
+from repro.serve.policy import (BatchingPolicy, ContinuousBatching,  # noqa: F401,E501
+                                DynamicBatching, StaticBatching, get_policy)
+
+_STEP_EXPORTS = ("make_decode_step", "make_prefill_step")
+
+
+def __getattr__(name):
+    if name in _STEP_EXPORTS:
+        from repro.serve import step
+        return getattr(step, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

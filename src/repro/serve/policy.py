@@ -1,0 +1,108 @@
+"""Batching policies shared by the measured and the simulated serving path.
+
+A policy decides *when* waiting requests are admitted into the running
+batch and *when* finished requests release their slot.  The same frozen
+dataclasses drive both worlds:
+
+  * ``examples/serve_batch.py`` sizes its real JAX prefill/decode batch
+    from ``policy.max_batch`` (and, with ``--simulate``, feeds the policy
+    to the model instead);
+  * ``repro.sim.serving.simulate_serving`` replays a request trace against
+    the policy through the event engine.
+
+The three classic points on the serving design space:
+
+``StaticBatching``
+    Admission only between batches, and only when ``max_batch`` requests
+    are waiting (or the trace is exhausted).  The formed batch runs
+    padded to its formed size until the *longest* request finishes —
+    early finishers keep burning their slot.  This is the throughput
+    baseline continuous batching is measured against.
+
+``DynamicBatching``
+    Admission only between batches, but a batch also launches when the
+    oldest waiting request has waited ``max_wait_s`` (the Triton-style
+    max-queue-delay knob).  Finished requests are evicted at
+    end-of-output, so the live batch shrinks — no padding waste — but
+    free slots stay empty until the whole batch drains.
+
+``ContinuousBatching``
+    Iteration-level scheduling (Orca-style): every model step evicts
+    finished requests and admits waiting ones into the freed slots, with
+    the newcomers' prefill interleaved into the same step.  Slots never
+    idle while work is queued.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import ClassVar, Dict, Type
+
+
+@dataclass(frozen=True)
+class BatchingPolicy:
+    """Base policy: at most ``max_batch`` requests share the model batch."""
+    max_batch: int = 8
+    kind: ClassVar[str] = "base"
+
+    def ready(self, n_waiting: int, oldest_wait_s: float,
+              trace_done: bool) -> bool:
+        """Whether a new batch may launch *between* batches (the live batch
+        has fully drained).  Continuous batching never waits for this —
+        it admits into free slots every step instead."""
+        raise NotImplementedError
+
+    def launch_deadline_s(self, oldest_arrival_s: float) -> float:
+        """Absolute time by which a waiting batch must launch even if it
+        is not full (``inf`` = wait for a full batch forever)."""
+        return float("inf")
+
+
+@dataclass(frozen=True)
+class StaticBatching(BatchingPolicy):
+    kind: ClassVar[str] = "static"
+
+    def ready(self, n_waiting, oldest_wait_s, trace_done):
+        return n_waiting >= self.max_batch or (trace_done and n_waiting > 0)
+
+
+@dataclass(frozen=True)
+class DynamicBatching(BatchingPolicy):
+    """Static admission plus a max-wait escape hatch."""
+    max_wait_s: float = 0.010
+    kind: ClassVar[str] = "dynamic"
+
+    def ready(self, n_waiting, oldest_wait_s, trace_done):
+        if n_waiting <= 0:
+            return False
+        return (n_waiting >= self.max_batch or trace_done
+                or oldest_wait_s >= self.max_wait_s)
+
+    def launch_deadline_s(self, oldest_arrival_s):
+        return oldest_arrival_s + self.max_wait_s
+
+
+@dataclass(frozen=True)
+class ContinuousBatching(BatchingPolicy):
+    kind: ClassVar[str] = "continuous"
+
+    def ready(self, n_waiting, oldest_wait_s, trace_done):
+        return n_waiting > 0          # any waiting request fills a free slot
+
+
+POLICIES: Dict[str, Type[BatchingPolicy]] = {
+    "static": StaticBatching,
+    "dynamic": DynamicBatching,
+    "continuous": ContinuousBatching,
+}
+
+
+def get_policy(name: str, **kwargs) -> BatchingPolicy:
+    """Policy by name (``static`` | ``dynamic`` | ``continuous``) with
+    field overrides, e.g. ``get_policy("dynamic", max_batch=16,
+    max_wait_s=0.005)``."""
+    try:
+        cls = POLICIES[name]
+    except KeyError:
+        raise KeyError(f"unknown batching policy {name!r}; "
+                       f"one of {sorted(POLICIES)}") from None
+    return cls(**kwargs)

@@ -1,6 +1,12 @@
 """Serving steps: batched prefill and single-token decode with a sharded
 KV / state cache.  ``serve_step`` for the dry-run decode shapes = one
 decode_forward call (one new token against a seq_len cache).
+
+Batch sizing and admission semantics live in ``repro.serve.policy`` —
+the same ``BatchingPolicy`` dataclasses drive this real JAX path (see
+``examples/serve_batch.py``) and the trace-driven simulator
+(``repro.sim.serving``), so measured and modeled serving agree on what
+"static" / "dynamic" / "continuous" batching means.
 """
 from __future__ import annotations
 

@@ -10,9 +10,12 @@ the three disconnected cost paths the seed carried (closed-form
 interface sums in the benchmarks).
 
 Lowerings:
-  ir.from_graph(Graph)        tile-level program from the declarative graph
-  ir.from_hlo(analyze_hlo())  macro-op program from a compiled XLA module
-  ir.from_tasks([TileTask])   legacy scheduler tasks (compat path)
+  ir.from_graph(Graph)         tile-level program from the declarative graph
+  ir.from_hlo(analyze_hlo())   macro-op program from a compiled XLA module
+  ir.from_decode(ModelConfig)  token-by-token autoregressive decode chain
+  ir.from_serving_step(...)    one batched serving iteration (prefill +
+                               continuous-batch decode)
+  ir.from_tasks([TileTask])    legacy scheduler tasks (compat path)
 
 ``core.simulator.roofline``/``breakdown`` and ``core.scheduler.simulate``
 remain as thin wrappers over this engine for API stability.
@@ -25,10 +28,20 @@ Design-space exploration goes through ``repro.sim.sweep``:
 The executor core is O(E log E) (heap ready queue, incremental HBM-port
 contention) with a prefix-sum fast path for linear-chain programs that is
 bit-identical to the event loop.
+
+Served workloads go through ``repro.sim.serving``: a request trace
+(Poisson / bursty / loaded records) replayed against a batching policy
+(static / dynamic / continuous, from ``repro.serve.policy``), reporting
+TTFT / TPOT percentiles, throughput and batch occupancy alongside the
+engine's usual views.
 """
 from repro.sim.engine import (EngineConfig, EngineResult, Plan,  # noqa: F401
-                              prepare, run)
+                              chain_op_costs, prepare, run)
 from repro.sim.ir import (CostedOp, Program, from_decode,  # noqa: F401
-                          from_graph, from_hlo)
+                          from_graph, from_hlo, from_serving_step)
+from repro.sim.serving import (Request, ServingResult,  # noqa: F401
+                               as_serving_records, bursty_trace, load_trace,
+                               poisson_trace, save_trace, simulate_serving,
+                               serving_sweep, trace_from_records)
 from repro.sim.sweep import (as_records, lower_graph, lower_hlo,  # noqa: F401
                              sweep)

@@ -234,6 +234,31 @@ def _transfer_base(op: CostedOp, config: EngineConfig,
     return t, exposed, e
 
 
+def chain_op_costs(op: CostedOp, config: EngineConfig
+                   ) -> Tuple[float, float, float, float]:
+    """(host, transfer, compute, collective) seconds ``op`` adds to a pure
+    linear chain under ``config`` — the exact per-op terms of the chain
+    fast path (every transfer starts alone, so the contention factor is 1
+    unless ``hbm_ports`` is fractional).
+
+    Adding the four terms left-to-right per op, in op order, reproduces the
+    engine's chain prefix sum bit-for-bit; the serving scheduler
+    (``repro.sim.serving``) uses this to advance its simulated clock with
+    precisely the costs ``run()`` will charge for the same ops.
+    """
+    host = config.host_dispatch_s + (
+        op.bytes / config.host_bw / config.host_threads
+        if config.host_bw else 0.0)
+    _, exposed, _ = _transfer_base(op, config, INTERFACES[config.interface])
+    if exposed > 0.0 and config.hbm_ports > 0:
+        exposed *= max(1.0, 1 / config.hbm_ports)
+    comp = (op.duration_s if op.duration_s is not None
+            else op.flops / config.peak_flops)
+    coll = (op.collective_bytes / config.ici_bw
+            if op.collective_bytes > 0.0 else 0.0)
+    return host, exposed, comp, coll
+
+
 # ---------------------------------------------------------------------------
 # the executor
 

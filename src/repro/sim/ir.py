@@ -6,17 +6,24 @@ and result bytes, routed through the pluggable interface model), collective
 traffic (assignment-metric operand bytes plus ring-model wire bytes),
 scheduling structure (deps, reduction affinity), and a reporting phase.
 
-Three lowerings produce ``Program``s:
+Five lowerings produce ``Program``s:
 
-  from_graph  the declarative ``repro.core.graph.Graph`` -> tile-level ops
-              via the dataflow tiling optimizer (replaces the old
-              ``graph.tile_tasks`` / ``graph_ops.node_cost`` path),
-  from_hlo    an ``analyze_hlo`` cost dict -> a chain of uniform macro-ops
-              that preserves every aggregate exactly (the compiled module is
-              already fused; per-instruction structure is gone),
-  from_decode a ``ModelConfig`` -> token-by-token autoregressive decode
-              chain (weight streaming + growing KV re-reads per token),
-  from_tasks  legacy ``TileTask`` lists (scheduler compat).
+  from_graph         the declarative ``repro.core.graph.Graph`` -> tile-level
+                     ops via the dataflow tiling optimizer (replaces the old
+                     ``graph.tile_tasks`` / ``graph_ops.node_cost`` path),
+  from_hlo           an ``analyze_hlo`` cost dict -> a chain of uniform
+                     macro-ops that preserves every aggregate exactly (the
+                     compiled module is already fused; per-instruction
+                     structure is gone),
+  from_decode        a ``ModelConfig`` -> token-by-token autoregressive
+                     decode chain (weight streaming + growing KV re-reads
+                     per token),
+  from_serving_step  one continuous-batching scheduler iteration (batched
+                     prefill of newly admitted requests + one decode token
+                     for every live request) -> a <=2-op step program; the
+                     serving simulator (``repro.sim.serving``) chains these
+                     into a full served-trace Program,
+  from_tasks         legacy ``TileTask`` lists (scheduler compat).
 """
 from __future__ import annotations
 
@@ -220,6 +227,28 @@ def from_hlo(hlo: Dict, n_ops: int = 8, name: str = "") -> Program:
 # lowering 2b: autoregressive decode -> per-token macro-op chain
 
 
+def _decode_terms(cfg, bytes_per_param: float
+                  ) -> Tuple[float, float, int, float]:
+    """(active params, per-layer KV width, attention layer count, streamed
+    weight bytes) of a ``ModelConfig`` — the shared accounting behind
+    ``from_decode`` and ``from_serving_step``.
+
+    The KV width is ``n_kv_heads * head_dim`` elements per layer; a token
+    at cache position ``p`` costs ``4 * n_attn_layers * kv_dim * p`` flops
+    (QK^T + AV over K and V) and re-reads ``2 * n_attn_layers * kv_dim * p``
+    cached elements.  SSM families (and hybrids outside their shared
+    attention block) carry no growing KV term.
+    """
+    n_active = float(cfg.active_param_count())
+    kv_dim = 0.0
+    n_attn_layers = 0
+    if getattr(cfg, "n_kv_heads", 0) and getattr(cfg, "family", "") != "ssm":
+        kv_dim = float(cfg.n_kv_heads * cfg.resolved_head_dim)
+        n_attn_layers = (cfg.n_layers // cfg.hybrid_attn_every
+                         if cfg.family == "hybrid" else cfg.n_layers)
+    return n_active, kv_dim, n_attn_layers, n_active * bytes_per_param
+
+
 def from_decode(cfg, n_tokens: int, *, seq_len: int = 1024, batch: int = 1,
                 ops_per_token: int = 8, bytes_per_param: float = 2.0,
                 name: str = "") -> Program:
@@ -235,14 +264,8 @@ def from_decode(cfg, n_tokens: int, *, seq_len: int = 1024, batch: int = 1,
     """
     n_tokens = max(int(n_tokens), 1)
     ops_per_token = max(int(ops_per_token), 1)
-    n_active = float(cfg.active_param_count())
-    kv_dim = 0.0
-    n_attn_layers = 0
-    if getattr(cfg, "n_kv_heads", 0) and getattr(cfg, "family", "") != "ssm":
-        kv_dim = float(cfg.n_kv_heads * cfg.resolved_head_dim)
-        n_attn_layers = (cfg.n_layers // cfg.hybrid_attn_every
-                         if cfg.family == "hybrid" else cfg.n_layers)
-    weight_bytes = n_active * bytes_per_param
+    n_active, kv_dim, n_attn_layers, weight_bytes = \
+        _decode_terms(cfg, bytes_per_param)
     ops: List[CostedOp] = []
     prev: Optional[str] = None
     for t in range(n_tokens):
@@ -268,6 +291,81 @@ def from_decode(cfg, n_tokens: int, *, seq_len: int = 1024, batch: int = 1,
                    f"/decode{n_tokens}", source="decode",
                    meta={"n_tokens": n_tokens, "seq_len": seq_len,
                          "batch": batch, "ops_per_token": ops_per_token})
+
+
+# ---------------------------------------------------------------------------
+# lowering 2c: one serving-scheduler iteration -> batched step program
+
+
+def from_serving_step(cfg, *, prefill_lens: Sequence[int] = (),
+                      decode_positions: Sequence[int] = (),
+                      step: int = 0, bytes_per_param: float = 2.0,
+                      name: str = "") -> Program:
+    """Lower ONE serving-scheduler iteration to a <=2-op step Program.
+
+    A continuous-batching model step does two things in a single forward
+    pass: it prefills the requests admitted this iteration and decodes one
+    token for every request already live.  The lowering mirrors that:
+
+      ``step<k>/prefill``  batched prefill of ``prefill_lens`` prompts —
+                           ``sum(L_j)`` tokens of dense compute plus the
+                           causal attention term
+                           ``4 * n_attn * kv_dim * L_j*(L_j-1)/2`` per
+                           prompt, writing ``L_j`` KV entries each;
+      ``step<k>/decode``   one token per entry of ``decode_positions``
+                           (the per-request KV length) — per slot the same
+                           ``from_decode`` accounting: ``2*N_active`` dense
+                           flops plus ``4 * n_attn * kv_dim * p`` attention
+                           flops and a ``2 * n_attn * kv_dim * p`` element
+                           KV re-read.
+
+    The full streamed weight set (``N_active * bytes_per_param``) is
+    charged ONCE per step, on the step's first op — this is the weight
+    amortization that makes batched decode pay off: the memory-bound cost
+    of a step is nearly flat in batch size while its token yield scales
+    with it.  Padded slots (static batching) are modeled by passing their
+    positions in ``decode_positions`` even though they yield no token —
+    the cost of computing garbage is real.
+
+    ``repro.sim.serving`` chains these step programs (each step's first op
+    depends on the previous step's last op) into one served-trace Program;
+    the result is a pure linear chain, so the engine's prefix-sum fast
+    path applies to whole-trace runs.
+    """
+    n_active, kv_dim, n_attn, weight_bytes = \
+        _decode_terms(cfg, bytes_per_param)
+    kv_entry = kv_dim * n_attn * bytes_per_param     # one token's KV write
+    ops: List[CostedOp] = []
+    prev: Optional[str] = None
+    if prefill_lens:
+        n_tok = float(sum(prefill_lens))
+        attn = sum(4.0 * n_attn * kv_dim * (L * (L - 1) // 2)
+                   for L in prefill_lens)
+        flops = 2.0 * n_active * n_tok + attn
+        prev = f"step{step}/prefill"
+        ops.append(CostedOp(
+            name=prev, flops=flops, dot_flops=flops,
+            bytes_in=weight_bytes,
+            bytes_out=kv_entry * n_tok,
+            phase=f"step{step}",
+            ))
+    if decode_positions:
+        batch = float(len(decode_positions))
+        pos_sum = float(sum(decode_positions))
+        flops = 2.0 * n_active * batch + 4.0 * n_attn * kv_dim * pos_sum
+        kv_read = 2.0 * n_attn * kv_dim * pos_sum * bytes_per_param
+        ops.append(CostedOp(
+            name=f"step{step}/decode", flops=flops, dot_flops=flops,
+            bytes_in=(0.0 if prev else weight_bytes) + kv_read,
+            bytes_out=kv_entry * batch,
+            deps=(prev,) if prev else (),
+            phase=f"step{step}",
+            ))
+    return Program(ops, name=name or f"{getattr(cfg, 'name', 'model')}"
+                   f"/step{step}", source="serving",
+                   meta={"step": step,
+                         "n_prefill": len(prefill_lens),
+                         "n_decode": len(decode_positions)})
 
 
 # ---------------------------------------------------------------------------

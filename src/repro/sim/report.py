@@ -4,7 +4,10 @@ the per-kind / per-phase aggregations previously duplicated across
 
 ``Breakdown`` and ``Roofline`` live here (and are re-exported by
 ``repro.core.simulator`` for API stability) so the engine, the closed-form
-wrappers, and the benchmarks all speak the same types.
+wrappers, and the benchmarks all speak the same types.  The serving layer
+adds population statistics: ``percentile`` (deterministic linear
+interpolation, no numpy dependency in the hot path) and ``latency_stats``
+(the p50/p90/p99/mean/max summary every serving table reports).
 """
 from __future__ import annotations
 
@@ -115,6 +118,36 @@ def roofline_from_totals(totals: Dict[str, float], *, host_s: float,
         roofline_fraction=(ideal / step) if step else 0.0,
         detail={"ideal_compute_s": ideal, "host_s": host_s,
                 "n_chips": n_chips})
+
+
+def percentile(values: Iterable[float], q: float) -> float:
+    """q-th percentile (0..100) with linear interpolation between order
+    statistics — same convention as ``numpy.percentile(...,
+    method="linear")``, but deterministic pure Python so serving metrics
+    stay bit-reproducible across numpy versions.  Empty input -> 0.0."""
+    xs = sorted(values)
+    if not xs:
+        return 0.0
+    if len(xs) == 1:
+        return xs[0]
+    rank = (len(xs) - 1) * (q / 100.0)
+    lo = int(rank)
+    hi = min(lo + 1, len(xs) - 1)
+    frac = rank - lo
+    return xs[lo] + (xs[hi] - xs[lo]) * frac
+
+
+def latency_stats(values: Iterable[float]) -> Dict[str, float]:
+    """p50/p90/p99/mean/max summary of a latency population (seconds in,
+    seconds out).  ``n`` carries the population size; an empty population
+    yields all-zero stats."""
+    xs = sorted(values)
+    if not xs:
+        return {"p50": 0.0, "p90": 0.0, "p99": 0.0, "mean": 0.0,
+                "max": 0.0, "n": 0}
+    return {"p50": percentile(xs, 50), "p90": percentile(xs, 90),
+            "p99": percentile(xs, 99), "mean": sum(xs) / len(xs),
+            "max": xs[-1], "n": len(xs)}
 
 
 def row(name: str, seconds: float, derived: str) -> Dict[str, object]:

@@ -1,0 +1,501 @@
+"""Trace-driven serving simulation: request arrivals, batching, the engine.
+
+SMAUG's core claim is that end-to-end behavior — queueing, data movement
+and framework overhead *around* the accelerator — dominates what per-layer
+kernel models predict.  This module extends that argument from a single
+request to a served workload: a trace of requests (arrival time, prompt
+length, output length) is replayed against a batching policy
+(``repro.serve.policy``), every scheduler iteration is lowered to costed
+ops via ``ir.from_serving_step``, and the chained step programs run
+through the PR-1/2 event engine — so one simulation yields per-request
+latency (TTFT / TPOT / p50 / p99), throughput and batch occupancy
+*alongside* the existing Timeline / Breakdown / Roofline / energy views.
+
+The pieces:
+
+  ``Request`` / ``poisson_trace`` / ``bursty_trace``
+      synthetic workload generators (seeded, fully deterministic) plus a
+      loadable record format (``load_trace`` / ``save_trace`` /
+      ``trace_from_records``: JSON or JSON-lines with ``arrival_s``,
+      ``prompt_len``, ``output_len`` fields);
+  ``simulate_serving(cfg, trace, policy, config)``
+      the scheduler co-simulation (below), returning a ``ServingResult``;
+  ``serving_sweep`` / ``as_serving_records``
+      the policy x arrival-rate design-space grid, one ``ServingResult``
+      per cell, flattened to tidy records like ``sweep.as_records``.
+
+How the co-simulation works.  Batching decisions depend on simulated time
+(arrivals race batch completions), so the scheduler advances its own clock
+while it builds the program: each iteration it forms a step per the
+policy, lowers it with ``ir.from_serving_step``, and advances time by the
+step's cost from ``engine.chain_op_costs`` — the exact per-op terms of the
+engine's chain fast path, added in the engine's addition order.  The
+chained steps form a pure linear chain, so when the finished program runs
+through ``sweep()`` the engine's makespan equals the scheduler's
+accumulated busy time *bit-for-bit* (asserted in tests/test_serving.py);
+the wall clock additionally contains the idle gaps where the server waited
+for arrivals, which exist only in the scheduler's timeline
+(``ServingResult.makespan_s`` vs ``EngineResult.makespan``).
+
+Same trace + same policy + same config => bit-identical ``ServingResult``
+(the scheduler is deterministic and the engine already is).
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+from repro.core.timeline import Timeline
+from repro.serve.policy import BatchingPolicy, StaticBatching
+from repro.sim import engine, ir
+from repro.sim.engine import EngineConfig, EngineResult
+from repro.sim.ir import Program
+from repro.sim.report import latency_stats
+
+__all__ = [
+    "Request", "RequestMetrics", "StepRecord", "ServingResult",
+    "poisson_trace", "bursty_trace", "trace_from_records", "load_trace",
+    "save_trace", "simulate_serving", "serving_sweep", "as_serving_records",
+]
+
+
+# ---------------------------------------------------------------------------
+# the request trace
+
+
+@dataclass(frozen=True)
+class Request:
+    """One serving request: when it arrives and how much work it is."""
+    rid: int
+    arrival_s: float
+    prompt_len: int
+    output_len: int
+
+
+_Len = Union[int, Tuple[int, int]]
+
+# name -> generator, the ``trace_kind`` registry shared by serving_sweep
+# and apps.serving.serve_trace (populated after the generators below)
+TRACE_GENERATORS: Dict[str, object] = {}
+
+
+def _draw_len(rng, spec: _Len, n: int):
+    if isinstance(spec, int):
+        return [spec] * n
+    lo, hi = spec
+    return [int(v) for v in rng.integers(lo, hi + 1, size=n)]
+
+
+def poisson_trace(n_requests: int, rate_rps: float, *,
+                  prompt_len: _Len = (16, 128), output_len: _Len = (8, 64),
+                  seed: int = 0) -> List[Request]:
+    """Poisson arrivals at ``rate_rps`` requests/s; prompt and output
+    lengths uniform over inclusive ``(lo, hi)`` ranges (or fixed ints).
+    Seeded and deterministic: the same arguments always yield the same
+    trace."""
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / rate_rps, size=n_requests)
+    arrivals = np.cumsum(gaps)
+    plens = _draw_len(rng, prompt_len, n_requests)
+    olens = _draw_len(rng, output_len, n_requests)
+    return [Request(i, float(arrivals[i]), max(plens[i], 1),
+                    max(olens[i], 1)) for i in range(n_requests)]
+
+
+def bursty_trace(n_requests: int, rate_rps: float, *, burst_size: int = 8,
+                 burst_factor: float = 10.0, prompt_len: _Len = (16, 128),
+                 output_len: _Len = (8, 64), seed: int = 0) -> List[Request]:
+    """Bursty arrivals: groups of ``burst_size`` requests arrive at
+    ``burst_factor``x the base rate, separated by exponential lulls of mean
+    ``burst_size / rate_rps`` — the long-run rate stays near ``rate_rps``
+    but queue depth spikes, which is what separates admission policies."""
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    arrivals = []
+    for i in range(n_requests):
+        if i and i % burst_size == 0:
+            t += float(rng.exponential(burst_size / rate_rps))
+        else:
+            t += float(rng.exponential(1.0 / (rate_rps * burst_factor)))
+        arrivals.append(t)
+    plens = _draw_len(rng, prompt_len, n_requests)
+    olens = _draw_len(rng, output_len, n_requests)
+    return [Request(i, arrivals[i], max(plens[i], 1), max(olens[i], 1))
+            for i in range(n_requests)]
+
+
+TRACE_GENERATORS.update(poisson=poisson_trace, bursty=bursty_trace)
+
+
+def trace_from_records(records: Sequence[Dict]) -> List[Request]:
+    """Build a trace from dict records with ``arrival_s`` / ``prompt_len``
+    / ``output_len`` keys (``rid`` optional; defaults to record order).
+    Raises ValueError on duplicate rids — per-request metrics are keyed on
+    them."""
+    trace = [Request(int(r.get("rid", i)), float(r["arrival_s"]),
+                     max(int(r["prompt_len"]), 1),
+                     max(int(r["output_len"]), 1))
+             for i, r in enumerate(records)]
+    if len({r.rid for r in trace}) != len(trace):
+        raise ValueError("duplicate rid in trace records")
+    return trace
+
+
+def load_trace(path) -> List[Request]:
+    """Load a trace file: a JSON array of records, or JSON-lines (one
+    record per line)."""
+    with open(path) as f:
+        text = f.read().strip()
+    if not text:
+        return []
+    if text[0] == "[":
+        return trace_from_records(json.loads(text))
+    return trace_from_records([json.loads(ln) for ln in text.splitlines()
+                               if ln.strip()])
+
+
+def save_trace(path, trace: Sequence[Request]) -> None:
+    """Write a trace as JSON-lines (the ``load_trace`` record format)."""
+    with open(path, "w") as f:
+        for r in trace:
+            f.write(json.dumps({"rid": r.rid, "arrival_s": r.arrival_s,
+                                "prompt_len": r.prompt_len,
+                                "output_len": r.output_len}) + "\n")
+
+
+# ---------------------------------------------------------------------------
+# results
+
+
+@dataclass
+class RequestMetrics:
+    """Per-request outcome; all times are absolute wall-clock seconds."""
+    rid: int
+    arrival_s: float
+    prompt_len: int
+    output_len: int
+    first_token_s: float = float("nan")
+    finish_s: float = float("nan")
+
+    @property
+    def ttft_s(self) -> float:
+        """Time to first token: arrival -> end of the prefill step."""
+        return self.first_token_s - self.arrival_s
+
+    @property
+    def tpot_s(self) -> float:
+        """Time per output token over the decode phase (0 for
+        single-token outputs)."""
+        if self.output_len <= 1:
+            return 0.0
+        return (self.finish_s - self.first_token_s) / (self.output_len - 1)
+
+    @property
+    def latency_s(self) -> float:
+        return self.finish_s - self.arrival_s
+
+
+@dataclass(frozen=True)
+class StepRecord:
+    """One scheduler iteration: where it sat in wall time and what it
+    batched.  ``n_active`` counts decode slots that emitted a token;
+    ``n_decode - n_active`` is padding (static batching's waste)."""
+    index: int
+    start_s: float
+    duration_s: float
+    n_prefill: int
+    n_decode: int
+    n_active: int
+
+    @property
+    def end_s(self) -> float:
+        return self.start_s + self.duration_s
+
+
+@dataclass
+class ServingResult:
+    """Everything one served-trace simulation produced.
+
+    ``engine`` is the ordinary ``EngineResult`` of the chained step program
+    (Timeline / Breakdown / Roofline / energy of the *work*, back-to-back);
+    ``makespan_s`` is the serving wall clock, which additionally contains
+    the idle gaps where the server waited for arrivals.  On any non-idle
+    trace ``engine.makespan <= makespan_s``, with bit-exact equality of
+    ``engine.makespan`` and ``busy_s``."""
+    program: Program
+    engine: EngineResult
+    requests: List[RequestMetrics]
+    steps: List[StepRecord]
+    policy: BatchingPolicy
+    config: EngineConfig
+    makespan_s: float                 # wall clock: end of the last step
+    busy_s: float                     # engine-order sum of step costs
+    meta: Dict = field(default_factory=dict)
+
+    @property
+    def total_tokens(self) -> int:
+        return sum(s.n_active for s in self.steps) \
+            + sum(s.n_prefill for s in self.steps)
+
+    @property
+    def throughput_tok_s(self) -> float:
+        """Output tokens per wall-clock second (prefill emits the first
+        token of each request; decode emits the rest)."""
+        return self.total_tokens / self.makespan_s if self.makespan_s \
+            else 0.0
+
+    @property
+    def throughput_req_s(self) -> float:
+        done = sum(1 for r in self.requests if r.finish_s == r.finish_s)
+        return done / self.makespan_s if self.makespan_s else 0.0
+
+    @property
+    def occupancy(self) -> float:
+        """Mean fraction of the ``max_batch`` decode slots that emitted a
+        token, over steps that decoded at all — the batch-utilization view
+        of the policy comparison."""
+        decode_steps = [s for s in self.steps if s.n_decode]
+        if not decode_steps:
+            return 0.0
+        return sum(s.n_active for s in decode_steps) \
+            / (self.policy.max_batch * len(decode_steps))
+
+    def stats(self) -> Dict[str, float]:
+        """Tidy scalar summary (the ``as_serving_records`` row body)."""
+        out: Dict[str, float] = {
+            "n_requests": len(self.requests),
+            "n_steps": len(self.steps),
+            "makespan_s": self.makespan_s,
+            "busy_s": self.busy_s,
+            "throughput_tok_s": self.throughput_tok_s,
+            "throughput_req_s": self.throughput_req_s,
+            "occupancy": self.occupancy,
+        }
+        for nm, vals in (("ttft", [r.ttft_s for r in self.requests]),
+                         ("tpot", [r.tpot_s for r in self.requests
+                                   if r.output_len > 1]),
+                         ("latency", [r.latency_s for r in self.requests])):
+            for k, v in latency_stats(vals).items():
+                if k != "n":
+                    out[f"{nm}_{k}"] = v
+        return out
+
+    def wall_timeline(self) -> Timeline:
+        """Wall-clock step timeline (arrival gaps visible as idle), one
+        event per scheduler step — the serving analogue of the engine's
+        per-op Timeline."""
+        tl = Timeline()
+        for s in self.steps:
+            tl.add("serve", f"step{s.index}", s.start_s, s.duration_s,
+                   "compute", phase=f"step{s.index}")
+        return tl
+
+
+# ---------------------------------------------------------------------------
+# the scheduler co-simulation
+
+
+@dataclass
+class _Slot:
+    req: Request
+    produced: int = 0     # output tokens emitted so far
+    pos: int = 0          # current KV length (prompt written at prefill)
+
+    @property
+    def done(self) -> bool:
+        return self.produced >= self.req.output_len
+
+
+def simulate_serving(cfg, trace: Sequence[Request],
+                     policy: BatchingPolicy,
+                     config: EngineConfig = EngineConfig(), *,
+                     bytes_per_param: float = 2.0,
+                     max_steps: int = 1_000_000,
+                     name: str = "") -> ServingResult:
+    """Replay ``trace`` against ``policy`` on ``config``; see the module
+    header for the co-simulation semantics.
+
+    ``cfg`` is a ``repro.core.config.ModelConfig`` (the served model);
+    ``bytes_per_param`` matches ``ir.from_decode``.  Raises RuntimeError
+    past ``max_steps`` iterations (a policy that stops making progress)."""
+    trace = sorted(trace, key=lambda r: (r.arrival_s, r.rid))
+    if len({r.rid for r in trace}) != len(trace):
+        raise ValueError("duplicate rid in trace; per-request metrics are "
+                         "keyed on it")
+    metrics = {r.rid: RequestMetrics(r.rid, r.arrival_s, r.prompt_len,
+                                     r.output_len) for r in trace}
+    static = isinstance(policy, StaticBatching) or policy.kind == "static"
+    continuous = policy.kind == "continuous"
+
+    all_ops: List[ir.CostedOp] = []
+    prev_op: Optional[str] = None
+    steps: List[StepRecord] = []
+    waiting: List[Request] = []
+    live: List[_Slot] = []
+    i = 0                          # next un-arrived trace index
+    t = 0.0                        # wall clock (includes arrival gaps)
+    busy = 0.0                     # engine-order accumulation of op costs
+    k = 0                          # step index
+    stalled = 0                    # consecutive zero-progress idle loops
+
+    while True:
+        while i < len(trace) and trace[i].arrival_s <= t:
+            waiting.append(trace[i])
+            i += 1
+        trace_done = i >= len(trace)
+
+        # eviction: continuous/dynamic free slots at end-of-output; static
+        # holds the formed batch (padding) until every member finishes
+        if static:
+            if live and all(s.done for s in live):
+                live = []
+        else:
+            live = [s for s in live if not s.done]
+
+        # admission
+        admitted: List[Request] = []
+        if continuous:
+            free = policy.max_batch - len(live)
+            if free > 0 and waiting:
+                admitted, waiting = waiting[:free], waiting[free:]
+        elif not live and waiting:
+            oldest = waiting[0].arrival_s
+            # the absolute-deadline comparison repeats the exact float
+            # expression the idle-advance below lands on, so a batch
+            # launched "at the deadline" cannot miss it to rounding
+            if (policy.ready(len(waiting), t - oldest, trace_done)
+                    or t >= policy.launch_deadline_s(oldest)):
+                admitted = waiting[:policy.max_batch]
+                waiting = waiting[policy.max_batch:]
+
+        decode_slots = [s for s in live if s.produced >= 1
+                        and (static or not s.done)]
+        if not admitted and not decode_slots:
+            # nothing runnable: advance to the next arrival or (dynamic)
+            # the oldest waiter's launch deadline; done when neither exists
+            nxt = []
+            if i < len(trace):
+                nxt.append(trace[i].arrival_s)
+            if waiting:
+                nxt.append(policy.launch_deadline_s(waiting[0].arrival_s))
+            nxt = [x for x in nxt if x < float("inf")]
+            if not nxt:
+                break
+            t_new = max(t, min(nxt))
+            if t_new == t:
+                stalled += 1
+                if stalled > 2:
+                    raise RuntimeError(
+                        f"serving scheduler stalled at t={t} with "
+                        f"{len(waiting)} waiting (policy {policy.kind!r})")
+            else:
+                stalled = 0
+            t = t_new
+            continue
+
+        # lower this iteration and advance both clocks with the exact
+        # chain-path costs (see engine.chain_op_costs)
+        step_prog = ir.from_serving_step(
+            cfg, step=k,
+            prefill_lens=tuple(r.prompt_len for r in admitted),
+            decode_positions=tuple(s.pos for s in decode_slots),
+            bytes_per_param=bytes_per_param)
+        t0 = t
+        for op in step_prog.ops:
+            if prev_op is not None and not op.deps:
+                op = ir.replace(op, deps=(prev_op,))
+            all_ops.append(op)
+            prev_op = op.name
+            h, x, c, l = engine.chain_op_costs(op, config)
+            t += h
+            t += x
+            t += c
+            t += l
+            busy += h
+            busy += x
+            busy += c
+            busy += l
+
+        n_active = 0
+        for s in decode_slots:
+            if not s.done:
+                s.produced += 1
+                n_active += 1
+                if s.done:
+                    metrics[s.req.rid].finish_s = t
+            s.pos += 1          # padded static slots advance with the batch
+        for r in admitted:
+            slot = _Slot(r, produced=1, pos=r.prompt_len)
+            metrics[r.rid].first_token_s = t
+            if slot.done:
+                metrics[r.rid].finish_s = t
+            live.append(slot)
+        steps.append(StepRecord(k, t0, t - t0, len(admitted),
+                                len(decode_slots), n_active))
+        k += 1
+        if k > max_steps:
+            raise RuntimeError(f"serving scheduler exceeded {max_steps} "
+                               f"steps (policy {policy.kind!r})")
+
+    program = Program(
+        all_ops, name=name or f"{getattr(cfg, 'name', 'model')}"
+        f"/serve-{policy.kind}x{len(trace)}", source="serving",
+        meta={"policy": policy.kind, "max_batch": policy.max_batch,
+              "n_requests": len(trace), "n_steps": len(steps)})
+    # the chained steps are a pure linear chain -> the official run takes
+    # the engine's prefix-sum fast path, through the sweep/DSE layer
+    from repro.sim.sweep import sweep
+    (engine_res,) = sweep(program, [config])
+    return ServingResult(program=program, engine=engine_res,
+                         requests=[metrics[r.rid] for r in trace],
+                         steps=steps, policy=policy, config=config,
+                         makespan_s=t, busy_s=busy,
+                         meta={"bytes_per_param": bytes_per_param})
+
+
+# ---------------------------------------------------------------------------
+# the policy x arrival-rate design-space grid
+
+
+def serving_sweep(cfg, policies: Sequence[BatchingPolicy],
+                  rates_rps: Sequence[float], *, n_requests: int = 64,
+                  config: EngineConfig = EngineConfig(),
+                  trace_kind: str = "poisson", seed: int = 0,
+                  bytes_per_param: float = 2.0,
+                  **trace_kw) -> List[ServingResult]:
+    """Evaluate every (policy, arrival-rate) cell on the SAME trace per
+    rate (one seeded generator call per rate, shared across policies, so
+    the comparison isolates the policy).  Returns results in
+    ``for rate: for policy:`` order; each carries its cell coordinates in
+    ``result.meta``."""
+    gen = TRACE_GENERATORS[trace_kind]
+    out: List[ServingResult] = []
+    for rate in rates_rps:
+        trace = gen(n_requests, rate, seed=seed, **trace_kw)
+        for policy in policies:
+            res = simulate_serving(cfg, trace, policy, config,
+                                   bytes_per_param=bytes_per_param)
+            res.meta.update({"rate_rps": rate, "policy": policy.kind,
+                             "trace_kind": trace_kind, "seed": seed})
+            out.append(res)
+    return out
+
+
+def as_serving_records(results: Sequence[ServingResult]
+                       ) -> List[Dict[str, float]]:
+    """Flatten ``ServingResult``s to tidy per-cell dicts (the serving
+    analogue of ``sweep.as_records``)."""
+    rows = []
+    for r in results:
+        row = {"program": r.program.name, "policy": r.policy.kind,
+               "max_batch": r.policy.max_batch,
+               "rate_rps": r.meta.get("rate_rps"),
+               "interface": r.config.interface,
+               "engine_makespan_s": r.engine.makespan,
+               "total_j": r.engine.energy["total_j"]}
+        row.update(r.stats())
+        rows.append(row)
+    return rows

@@ -66,6 +66,9 @@ def lower_hlo(hlo: Dict, n_ops: int = 8, name: str = "") -> Program:
 
 
 def clear_caches() -> None:
+    """Drop the memoized lowerings (tests and long-lived sessions that
+    churn through many graphs; the LRU-ish eviction above bounds memory
+    for everyone else)."""
     _graph_cache.clear()
     _hlo_cache.clear()
 

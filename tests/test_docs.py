@@ -1,0 +1,41 @@
+"""Docs gate as a tier-1 test: the fenced Python blocks in README.md and
+docs/GUIDE.md must execute (same runner ``tools/ci.sh`` uses), and the
+extractor itself must parse fences correctly."""
+import importlib.util
+import pathlib
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def _runner():
+    spec = importlib.util.spec_from_file_location(
+        "run_doc_snippets", ROOT / "tools" / "run_doc_snippets.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_extract_blocks_parses_fences():
+    mod = _runner()
+    text = ("pre\n```python\na = 1\n```\n"
+            "```bash\nls\n```\n"
+            "```python no-run\nraise RuntimeError\n```\n"
+            "```\nplain\n```\n")
+    blocks = mod.extract_blocks(text)
+    assert [info for _, info, _ in blocks] == ["python", "bash",
+                                               "python no-run"]
+    assert blocks[0][2] == "a = 1\n"
+
+
+# marked slow so tools/ci.sh (pytest -m "not slow" + the explicit
+# run_doc_snippets gate) executes the snippets once, not twice; plain
+# tier-1 (`pytest -x -q`) still runs this
+@pytest.mark.slow
+@pytest.mark.parametrize("doc", ["README.md", "docs/GUIDE.md"])
+def test_doc_snippets_execute(doc, capsys):
+    mod = _runner()
+    ran, failures = mod.run_file(ROOT / doc)
+    assert failures == 0, f"{doc} has failing python blocks (see stderr)"
+    assert ran > 0, f"{doc} has no runnable python blocks"

@@ -17,9 +17,15 @@ else
 fi
 
 # smoke the engine-driven case studies (multiacc exercises from_graph +
-# worker sweep + port contention; interfaces exercises dma vs acp)
+# worker sweep + port contention; interfaces exercises dma vs acp;
+# serving exercises the trace-driven batching layer end to end)
 python -m benchmarks.run --only multiacc
 python -m benchmarks.run --only interfaces
+python -m benchmarks.run --only serving
+
+# docs gate: every fenced ```python block in the README and the guide must
+# execute — documentation cannot rot silently
+python tools/run_doc_snippets.py README.md docs/GUIDE.md
 
 # perf smoke: engine/sweep timings must stay within 2x of the budgets
 # recorded in BENCH_engine.json (fails the build on >2x regression)

@@ -1,0 +1,98 @@
+#!/usr/bin/env python
+"""Docs gate: extract and execute the fenced Python blocks in markdown.
+
+Every block fenced as ```python in the given files is executed, in file
+order, with ONE shared namespace per file — so a tutorial can build on its
+earlier blocks the way a reader follows it.  A block fenced as
+```python no-run is displayed-only (use sparingly: for output samples or
+deliberately failing snippets).  Any exception fails the run with the
+offending file, block, and source line — documentation cannot rot
+silently once ``tools/ci.sh`` calls this.
+
+  PYTHONPATH=src python tools/run_doc_snippets.py README.md docs/GUIDE.md
+
+Exit status: 0 if every block ran, 1 otherwise (or if a file has no
+runnable blocks at all, which usually means a fence typo).
+"""
+from __future__ import annotations
+
+import pathlib
+import sys
+import traceback
+from typing import List, Tuple
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def extract_blocks(text: str) -> List[Tuple[int, str, str]]:
+    """(start line, info string, code) for every fenced code block."""
+    blocks = []
+    lines = text.splitlines()
+    i = 0
+    while i < len(lines):
+        stripped = lines[i].strip()
+        if stripped.startswith("```") and stripped != "```":
+            info = stripped[3:].strip()
+            start = i + 1
+            body = []
+            i += 1
+            while i < len(lines) and lines[i].strip() != "```":
+                body.append(lines[i])
+                i += 1
+            blocks.append((start + 1, info, "\n".join(body) + "\n"))
+        i += 1
+    return blocks
+
+
+def run_file(path: pathlib.Path) -> Tuple[int, int]:
+    """Execute a file's python blocks in one shared namespace.
+    Returns (blocks run, failures)."""
+    blocks = extract_blocks(path.read_text())
+    py = [(ln, code) for ln, info, code in blocks
+          if (info == "python" or info.startswith("python "))
+          and "no-run" not in info]
+    ns: dict = {"__name__": f"doc_snippets:{path.name}"}
+    ran = failures = 0
+    for idx, (ln, code) in enumerate(py):
+        try:
+            exec(compile(code, f"{path}:block{idx}(line {ln})", "exec"), ns)
+            ran += 1
+        except Exception:
+            failures += 1
+            print(f"FAIL {path} block {idx} (line {ln}):", file=sys.stderr)
+            print("\n".join(f"    {l}" for l in code.splitlines()),
+                  file=sys.stderr)
+            traceback.print_exc()
+    return ran, failures
+
+
+def main(argv: List[str]) -> int:
+    if not argv:
+        print(__doc__)
+        return 1
+    total = failures = 0
+    for arg in argv:
+        path = pathlib.Path(arg)
+        if not path.is_absolute():
+            path = ROOT / arg
+        if not path.exists():
+            print(f"no such file: {path}", file=sys.stderr)
+            return 1
+        ran, bad = run_file(path)
+        total += ran
+        failures += bad
+        status = "OK" if not bad else f"{bad} FAILED"
+        print(f"{path.relative_to(ROOT)}: {ran} python block(s) {status}")
+        if ran == 0 and not bad:
+            print(f"  no runnable ```python blocks found in {path.name} — "
+                  "fence typo?", file=sys.stderr)
+            failures += 1
+    if failures:
+        print(f"docs gate: {failures} failing block(s)", file=sys.stderr)
+        return 1
+    print(f"docs gate: {total} block(s) OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
