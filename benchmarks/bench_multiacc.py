@@ -1,37 +1,69 @@
-"""Fig 12/13 analogue: multi-accelerator (worker) scaling on the paper's
-networks — reduction affinity caps the speedup and concurrent tile
-transfers contend for HBM ports (the Fig 13 effect).  The worker-count grid
-is one ``sweep()`` over a single lowering per network."""
+"""Fig 12/13 analogue: multi-accelerator scaling on the paper's networks,
+simulated on genuine ``SoCTopology`` objects — a CPU frontend device
+preprocesses each input and feeds 1..8 NN accelerators over ONE shared
+HBM link (4 ports), so reduction affinity caps the speedup, concurrent
+tile transfers contend for the shared ports (the Fig 13 effect), and the
+serial frontend bounds the end-to-end scaling (Amdahl — the SMAUG claim
+that SoC-level effects dominate).  The accelerator-count grid is one
+``topology_sweep()`` over a single lowering per network."""
 from __future__ import annotations
-
-import dataclasses
 
 from repro.configs.paper_nets import PAPER_NETS
 from repro.sim import engine
+from repro.sim.hw import Device, Link, SoCTopology
+from repro.sim.ir import BYTES_PER_ELEM, CostedOp, Program
 from repro.sim.report import row
-from repro.sim.sweep import lower_graph, sweep
+from repro.sim.sweep import lower_graph, topology_sweep
 from benchmarks.common import build_paper_graph
 
-WORKER_GRID = (1, 2, 4, 8)
-BASE = engine.EngineConfig(interface="hbm", hbm_ports=4)
+ACCEL_GRID = (1, 2, 4, 8)
+BASE = engine.EngineConfig(interface="hbm")
+FRONTEND_PEAK = 1e12           # embedded CPU cluster feeding the accels
+
+
+def soc(n_accels: int) -> SoCTopology:
+    """1 CPU frontend + ``n_accels`` accelerators on one 4-port link."""
+    return SoCTopology(
+        devices=(Device("cpu0", kind="cpu", peak_flops=FRONTEND_PEAK),)
+        + tuple(Device(f"acc{i}") for i in range(n_accels)),
+        links=(Link("hbm", ports=4.0),),
+        name=f"cpu+{n_accels}acc")
+
+
+def frontend_program(g, batch: int = 1) -> Program:
+    """Host preprocessing for one inference: decode + normalize the input
+    tensor on the CPU device (a few ops/byte), feeding the network."""
+    inp = next(n for n in g.nodes.values() if n.op == "input")
+    elems = 1.0
+    for d in inp.shape:
+        elems *= d
+    elems *= batch
+    nbytes = BYTES_PER_ELEM * elems
+    return Program([CostedOp(
+        "frontend/prep", flops=8.0 * elems, bytes_in=nbytes,
+        bytes_out=nbytes, phase="frontend", device_class="cpu")],
+        name="frontend", source="custom")
 
 
 def run(emit=print):
     rows = []
-    configs = [dataclasses.replace(BASE, n_workers=n) for n in WORKER_GRID]
+    topologies = [soc(n) for n in ACCEL_GRID]
     for name in ("minerva", "lenet5", "cnn10", "vgg16", "elu16"):
         net = PAPER_NETS[name]
         g = build_paper_graph(net, batch=1)
         # small tiles ~ the paper's 32KB scratchpads -> rich tile parallelism
-        prog = lower_graph(g, batch=1, max_tile_elems=2048)
-        results = sweep(prog, configs)
+        dnn = lower_graph(g, batch=1, max_tile_elems=2048)
+        prog = frontend_program(g).then(dnn, name=f"{name}+frontend")
+        results = topology_sweep(prog, topologies, BASE)
         base = results[0].makespan
-        for n_acc, res in zip(WORKER_GRID, results):
+        for n_acc, res in zip(ACCEL_GRID, results):
             kinds = res.per_kind
+            dev_util = res.device_utilization()
             rows.append(row(
                 f"multiacc/{name}/acc{n_acc}", res.makespan,
                 f"speedup={base / res.makespan:.2f}x "
                 f"util={res.utilization():.2f} "
+                f"cpu_util={dev_util['cpu0']:.2f} "
                 f"xfer_s={kinds.get('transfer', 0):.2e} "
                 f"tiles={len(prog)}"))
     return rows

@@ -1,0 +1,197 @@
+"""Camera-SoC tuning: the heterogeneous topology sweep (SMAUG §V).
+
+One simulated execution per SoC: the camera ISP runs on the frontend
+device (embedded CPU or vector DSP) and feeds the CNN10 tile program to
+1..8 NN accelerators over ONE shared HBM link — varying the *topology*
+(frontend kind x accelerator count x shared-port count), exactly the
+knobs the paper's camera-SoC study turns.  Per-device utilization and
+breakdown separate the frontend from the accelerators, which a flat
+worker pool cannot express.
+
+Full mode (``python -m benchmarks.bench_soc``) writes the grid and the
+CI budgets to ``BENCH_soc.json`` at the repo root.
+
+``--quick`` (the ``tools/ci.sh`` perf smoke) re-times the sweep against
+the recorded budget with the 2x-regression gate, and additionally runs
+the homogeneous-equivalence probe: a flat ``EngineConfig`` and its
+explicit ``SoCTopology.homogeneous`` expansion must produce bit-identical
+results (exit 1 on either failure).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import pathlib
+import sys
+import time
+
+from repro.apps.camera import camera_soc, soc_frame_sweep
+from repro.configs.paper_nets import PAPER_NETS
+from repro.sim import engine, ir
+from repro.sim.hw import SoCTopology
+from repro.sim.report import row
+from repro.sim.sweep import lower_graph
+from benchmarks.common import build_paper_graph
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+BENCH_JSON = ROOT / "BENCH_soc.json"
+
+# the SoC grid: frontend kind x accelerator count x shared-port count
+FRONTENDS = ("cpu", "dsp")
+ACCEL_GRID = (1, 2, 4, 8)
+PORT_GRID = (1.0, 4.0)  # narrow vs wide shared-port pool
+# embedded-SoC base point (the paper's regime, not the datacenter chip):
+# 128 GFLOP/s NN accelerators (8x8 PE at GHz scale) streaming over a
+# shared LPDDR4-class link; the frontend peaks come from
+# apps.camera.FRONTEND_PEAK and its stencils run fused via acp
+BASE = engine.EngineConfig(interface="dma", peak_flops=1.28e11,
+                           hbm_bw=25.6e9, vmem_bw=1e12,
+                           host_dispatch_s=1e-6)
+
+
+def _grid():
+    return [camera_soc(n, frontend, link_ports=p)
+            for frontend in FRONTENDS for n in ACCEL_GRID
+            for p in PORT_GRID]
+
+
+def _dnn_program():
+    g = build_paper_graph(PAPER_NETS["cnn10"], batch=1)
+    return lower_graph(g, batch=1, max_tile_elems=2048)
+
+
+def measure():
+    dnn = _dnn_program()
+    t0 = time.perf_counter()
+    cells = soc_frame_sweep(dnn, _grid(), BASE)
+    sweep_s = time.perf_counter() - t0
+    records, rows = [], []
+    for topo, frame, res in cells:
+        frontend = topo.devices[0]
+        util = res.device_utilization()
+        accel_utils = [util[d.name] for d in topo.devices
+                       if d.kind == "accel"]
+        bds = res.device_breakdowns()
+        fbd = bds.get(frontend.name)
+        phases = res.per_phase
+        rec = {
+            "topology": topo.name, "frontend": frontend.kind,
+            "n_accels": topo.n_accel,
+            "link_ports": topo.links[0].ports,
+            "makespan_s": res.makespan,
+            "isp_s": phases.get("isp", 0.0),
+            "frontend_util": util[frontend.name],
+            "accel_util_mean": sum(accel_utils) / len(accel_utils),
+            "frontend_compute_s": fbd.accelerator_s if fbd else 0.0,
+            "frontend_transfer_s": fbd.transfer_s if fbd else 0.0,
+            "accel_compute_s": sum(
+                bds[d.name].accelerator_s for d in topo.devices
+                if d.kind == "accel" and d.name in bds),
+            "accel_transfer_s": sum(
+                bds[d.name].transfer_s for d in topo.devices
+                if d.kind == "accel" and d.name in bds),
+            "transfer_s": res.breakdown.transfer_s,
+            "bound": res.roofline.bound,
+            "total_j": res.energy["total_j"],
+        }
+        records.append(rec)
+        rows.append(row(
+            f"soc/{topo.name}", res.makespan,
+            f"front_util={rec['frontend_util']:.2f} "
+            f"acc_util={rec['accel_util_mean']:.2f} "
+            f"isp_ms={rec['isp_s']*1e3:.2f} "
+            f"bound={rec['bound']}"))
+    return {"records": records,
+            "budget_s": {"soc_sweep_16cells": round(sweep_s, 6)},
+            "grid": {"frontends": list(FRONTENDS),
+                     "n_accels": list(ACCEL_GRID),
+                     "link_ports": list(PORT_GRID)}}, rows, sweep_s
+
+
+# ---------------------------------------------------------------------------
+# homogeneous-equivalence probe: flat config == explicit expansion, bit
+# for bit (the topology layer's correctness gate, cheap enough for CI)
+
+
+def check_homogeneous_equivalence() -> bool:
+    from repro.configs.gemma_2b import SMOKE
+    probes = [
+        ir.from_decode(SMOKE, n_tokens=16, ops_per_token=4),    # chain path
+        _dnn_program(),                                         # event loop
+    ]
+    flats = [
+        engine.EngineConfig(n_workers=4, interface="hbm", hbm_ports=2),
+        engine.EngineConfig(n_workers=8, interface="acp", hbm_ports=1,
+                            host_dispatch_s=1e-6, host_bw=20e9,
+                            host_threads=4),
+    ]
+    ok = True
+    for prog in probes:
+        for cfg in flats:
+            topo_cfg = dataclasses.replace(
+                cfg, topology=SoCTopology.homogeneous(cfg.n_workers))
+            a = engine.run(prog, cfg)
+            b = engine.run(prog, topo_cfg)
+            same = (a.makespan == b.makespan
+                    and a.breakdown == b.breakdown
+                    and a.roofline == b.roofline
+                    and a.energy == b.energy
+                    and a.timeline.events == b.timeline.events)
+            if not same:
+                print(f"homogeneous-equivalence FAILED: {prog.name} on "
+                      f"{cfg.interface}/{cfg.n_workers}w", file=sys.stderr)
+                ok = False
+    return ok
+
+
+def run(emit=print):
+    """benchmarks.run driver entry: the sweep rows (no file writes)."""
+    _, rows, _ = measure()
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="sweep timing vs the BENCH_soc.json budget (2x "
+                         "gate) + the homogeneous-equivalence probe")
+    args = ap.parse_args()
+    out, rows, sweep_s = measure()
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']},\"{r['derived']}\"")
+    if args.quick:
+        failed = not check_homogeneous_equivalence()
+        if not failed:
+            print("perf-smoke soc: homogeneous-equivalence OK")
+        if not BENCH_JSON.exists():
+            print(f"no {BENCH_JSON.name}; run without --quick to record "
+                  "budgets", file=sys.stderr)
+            sys.exit(1)
+        budgets = json.loads(BENCH_JSON.read_text()).get("budget_s", {})
+        for name, measured in out["budget_s"].items():
+            budget = budgets.get(name)
+            if budget is None:
+                continue
+            verdict = "OK" if measured <= 2.0 * budget else "REGRESSION"
+            print(f"perf-smoke {name}: {measured*1e3:.1f}ms vs budget "
+                  f"{budget*1e3:.1f}ms (2x gate) {verdict}")
+            failed |= verdict != "OK"
+        if failed:
+            print("bench_soc smoke failed (perf >2x budget or "
+                  "equivalence broken)", file=sys.stderr)
+            sys.exit(1)
+        return
+    if not check_homogeneous_equivalence():
+        sys.exit(1)
+    out["recorded"] = time.strftime("%Y-%m-%d")
+    out["note"] = ("camera-SoC topology sweep (frontend x n_accels x "
+                   "shared-link ports) on the composed ISP+CNN10 frame "
+                   "program; budget_s feeds the tools/ci.sh --quick 2x "
+                   "gate")
+    BENCH_JSON.write_text(json.dumps(out, indent=2) + "\n")
+    print(f"wrote {BENCH_JSON}")
+
+
+if __name__ == "__main__":
+    main()

@@ -20,6 +20,7 @@ MODULES = [
     ("combined", "Fig 18 — combined optimizations"),
     ("timeline", "Fig 14 — utilization timeline"),
     ("camera", "Fig 19/20 — camera vision pipeline"),
+    ("soc", "SoC tuning — heterogeneous camera-SoC topology sweep"),
     ("roofline", "§Roofline — per-cell roofline terms"),
     ("serving", "serving — trace-driven batching policy x arrival rate"),
     ("engine_perf", "infra — executor scaling (small/medium/5k-op sweep)"),

@@ -88,10 +88,18 @@ def camera_pipeline(raw, dnn_hw=(32, 32)):
 # engine lowering (Fig 19/20): the ISP stages as a repro.sim Program, so the
 # camera case study composes with the DNN graph in ONE simulated execution
 # (``camera_program(...).then(graph.program())``) instead of a bolt-on sum.
+# The ISP ops are tagged for the SoC's frontend device (CPU by default, a
+# DSP when the topology provides one), so on a heterogeneous SoCTopology
+# the frontend genuinely runs beside — and contends with — the DNN
+# accelerators instead of being folded into the same worker pool.
 
 
-def camera_program(hw=(720, 1280), dnn_hw=(32, 32)):
-    """Per-stage (flops, bytes) costs of the ISP at the given raw size."""
+def camera_program(hw=(720, 1280), dnn_hw=(32, 32), device_class="cpu"):
+    """Per-stage (flops, bytes) costs of the ISP at the given raw size.
+
+    ``device_class`` places the stages on the SoC frontend (``"cpu"`` |
+    ``"dsp"``); flat configs have no such device and fall back to the
+    accelerator pool, which reproduces the pre-topology behavior."""
     from repro.sim.ir import BYTES_PER_ELEM, CostedOp, Program
 
     H, W = hw
@@ -119,22 +127,95 @@ def camera_program(hw=(720, 1280), dnn_hw=(32, 32)):
             bytes_out=BYTES_PER_ELEM * eout,
             transcendentals=eout if name == "gamma" else 0.0,
             deps=(prev,) if prev else (),
-            phase="isp"))
+            phase="isp",
+            device_class=device_class))
         prev = f"isp/{name}"
     return Program(ops, name="camera_isp", source="custom",
-                   meta={"hw": hw, "dnn_hw": dnn_hw})
+                   meta={"hw": hw, "dnn_hw": dnn_hw,
+                         "device_class": device_class})
+
+
+# frontend peak flops per kind, embedded-SoC scale: an in-order CPU
+# cluster vs a vector DSP (the camera ISP is stencil/pointwise code both
+# can run; the DSP is the paper's specialized-frontend alternative)
+FRONTEND_PEAK = {"cpu": 5e10, "dsp": 2e11}
+
+
+def camera_soc(n_accels=4, frontend="cpu", *, link_ports=4.0,
+               frontend_peak_flops=None, frontend_interface="acp",
+               accel_peak_flops=None, accel_datapath_scale=None, name=""):
+    """A camera SoC topology: one ``frontend`` device (``"cpu"`` |
+    ``"dsp"``) feeding ``n_accels`` NN accelerators over one shared HBM
+    link with ``link_ports`` ports — the object SMAUG's camera-SoC-tuning
+    study sweeps.  The frontend defaults to the fused/resident ``acp``
+    interface (ISP stencils stream through on-chip line buffers, Halide
+    style) while the accelerators inherit the flat config's interface and
+    stream their tiles over the shared link.  Accelerator fields left
+    ``None`` inherit the flat ``EngineConfig`` (peak flops, datapath
+    scale), so the same topology grid composes with the Fig-20 PE-size
+    knobs."""
+    from repro.sim.hw import Device, Link, SoCTopology
+
+    fpeak = (FRONTEND_PEAK.get(frontend, FRONTEND_PEAK["cpu"])
+             if frontend_peak_flops is None else frontend_peak_flops)
+    devices = (Device(f"{frontend}0", kind=frontend, peak_flops=fpeak,
+                      interface=frontend_interface),)
+    devices += tuple(Device(f"acc{i}", peak_flops=accel_peak_flops,
+                            datapath_scale=accel_datapath_scale)
+                     for i in range(n_accels))
+    return SoCTopology(
+        devices=devices, links=(Link("hbm", ports=link_ports),),
+        name=name or f"{frontend}+{n_accels}acc/p{link_ports:g}")
 
 
 def frame_sweep(dnn_program, configs, hw=(720, 1280), dnn_hw=(32, 32),
-                name="frame"):
+                name="frame", frontend_class="cpu"):
     """Whole-frame design-space sweep: ISP program composed with the DNN
     program, evaluated under every SoC config through the batched
     ``repro.sim.sweep`` layer (one lowering + shared dependency plan).
 
     Returns ``(frame_program, [EngineResult per config])`` — the Fig 19/20
-    accelerator-size study is one call with a PE-scaled config grid.
+    accelerator-size study is one call with a PE-scaled config grid, and
+    the camera-SoC-tuning study is the same call with topology-bearing
+    configs (``EngineConfig(topology=camera_soc(...))``), where the ISP
+    stages land on the frontend device and the DNN tiles on the
+    accelerators in ONE simulated execution.
     """
     from repro.sim.sweep import sweep
 
-    frame = camera_program(hw, dnn_hw).then(dnn_program, name=name)
+    frame = camera_program(hw, dnn_hw, device_class=frontend_class) \
+        .then(dnn_program, name=name)
     return frame, sweep(frame, configs)
+
+
+def soc_frame_sweep(dnn_program, topologies, base_config=None,
+                    hw=(720, 1280), dnn_hw=(32, 32), name="frame"):
+    """Camera-SoC-tuning sweep over a grid of ``camera_soc`` topologies.
+
+    The frontend class of each composed frame program follows the
+    topology's frontend device kind, so a ``dsp`` SoC runs the ISP on its
+    DSP.  Topologies sharing a frontend kind share one composed frame
+    program, so the whole group goes through ``sweep`` as one batch (one
+    lowering + one dependency plan per kind, not per cell).  Returns
+    ``[(topology, frame_program, EngineResult)]`` in grid order — one
+    genuinely heterogeneous simulated execution per SoC."""
+    import dataclasses
+
+    from repro.sim.engine import EngineConfig
+    from repro.sim.sweep import sweep
+
+    base = base_config if base_config is not None else EngineConfig()
+    topologies = list(topologies)
+    kinds = [next((d.kind for d in t.devices if d.kind in ("cpu", "dsp")),
+                  "cpu") for t in topologies]
+    out = [None] * len(topologies)
+    for kind in dict.fromkeys(kinds):           # unique, grid order
+        idxs = [i for i, k in enumerate(kinds) if k == kind]
+        frame = camera_program(hw, dnn_hw, device_class=kind) \
+            .then(dnn_program, name=f"{name}/{kind}")
+        results = sweep(frame, [
+            dataclasses.replace(base, topology=topologies[i])
+            for i in idxs])
+        for i, res in zip(idxs, results):
+            out[i] = (topologies[i], frame, res)
+    return out

@@ -20,9 +20,18 @@ Lowerings:
 ``core.simulator.roofline``/``breakdown`` and ``core.scheduler.simulate``
 remain as thin wrappers over this engine for API stability.
 
+The SoC itself is a first-class object (``repro.sim.hw``): ``Device``
+(cpu / accel / dsp, per-device peak flops, datapath scale, interface,
+bandwidths) and ``Link`` (shared port pool) compose into an
+``SoCTopology`` carried by ``EngineConfig.topology``.  Ops are placed by
+their ``device_class`` tag and transfers contend per link; a homogeneous
+topology is bit-identical to the flat config it expands.
+
 Design-space exploration goes through ``repro.sim.sweep``:
   sweep(program, configs)     one lowering + shared dependency plan, many
                               configs (serial / threads / processes)
+  topology_sweep(program, topologies, base_config)
+                              the same, over an SoC-topology grid
   lower_graph / lower_hlo     memoized lowerings keyed on
                               (graph identity, batch, tile params)
 The executor core is O(E log E) (heap ready queue, incremental HBM-port
@@ -37,6 +46,7 @@ engine's usual views.
 """
 from repro.sim.engine import (EngineConfig, EngineResult, Plan,  # noqa: F401
                               chain_op_costs, prepare, run)
+from repro.sim.hw import Device, Link, SoCTopology  # noqa: F401
 from repro.sim.ir import (CostedOp, Program, from_decode,  # noqa: F401
                           from_graph, from_hlo, from_serving_step)
 from repro.sim.serving import (Request, ServingResult,  # noqa: F401
@@ -44,4 +54,4 @@ from repro.sim.serving import (Request, ServingResult,  # noqa: F401
                                poisson_trace, save_trace, simulate_serving,
                                serving_sweep, trace_from_records)
 from repro.sim.sweep import (as_records, lower_graph, lower_hlo,  # noqa: F401
-                             sweep)
+                             sweep, topology_sweep)

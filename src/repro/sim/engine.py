@@ -1,57 +1,68 @@
 """Event-driven executor: one simulated execution -> every paper metric.
 
-``run(program, config)`` schedules ``CostedOp``s over N accelerator workers:
+``run(program, config)`` schedules ``CostedOp``s over the devices of an
+``SoCTopology`` (``config.topology``; ``None`` means the homogeneous
+expansion of the flat fields — ``n_workers`` identical accelerators on one
+shared link, bit-identical to the pre-topology engine):
 
-  * every producer->consumer tensor is staged through a pluggable interface
-    model ("hbm" bare round-trip, "dma" software-managed staging,
-    "acp" fused/VMEM-resident, "ideal" free) — the Fig 11 study is just two
-    runs of the same program;
-  * concurrent transfers contend for a fixed number of HBM ports (effective
-    bandwidth divides once active transfers exceed ports — this replaces
-    the old ad-hoc ``shared_bw_penalty`` scaling);
+  * every op is placed on a device whose ``kind`` matches the op's
+    ``device_class`` (host preprocessing on the CPU device, NN ops on the
+    accelerators; a class with no matching device falls back to the
+    accelerators) — least-loaded-first within the class;
+  * every producer->consumer tensor is staged through the placed device's
+    interface model ("hbm" bare round-trip, "dma" software-managed
+    staging, "acp" fused/VMEM-resident, "ideal" free) — the Fig 11 study
+    is just two runs of the same program;
+  * concurrent transfers contend per **link**: active transfers on a link
+    beyond its port count share bandwidth (the shared HBM port pool of
+    the multi-accelerator studies; independent links don't contend);
   * each dispatch charges serial host/framework time (per-op launch cost
     plus a host-bandwidth tiling term divided over host threads — the
     Fig 15/16 multithreading study);
-  * reduction-affinity ops pin to one worker queue (Fig 14);
+  * reduction-affinity ops pin to one device queue (Fig 14);
   * collective traffic serializes on the ICI lane.
 
-The result carries the Timeline, the Fig-1 Breakdown, the Roofline terms and
-the energy estimate of the *same* run.
+The result carries the Timeline, the Fig-1 Breakdown, the Roofline terms,
+the per-device breakdown and the energy estimate of the *same* run.
 
 Performance.  The core is O(E log E) in the number of ops/events: the
-per-wave LPT sort is a max-heap ready queue, and HBM-port contention is
-answered from an incrementally maintained active-transfer structure
-(finished windows are heap-expired once no future transfer can start before
-their end, so memory stays bounded by the live concurrency instead of the
-whole history).  Per-op interface/compute costs are schedule-independent
-and are computed once, outside the loop.  Linear-chain programs (the
-``from_hlo`` macro-op shape and token-by-token decode) take a prefix-sum
-fast path that reproduces the event loop bit-for-bit.  ``prepare()`` lets
-callers (``repro.sim.sweep``) share the dependency bookkeeping across many
+per-wave LPT sort is a max-heap ready queue, and link contention is
+answered from incrementally maintained per-link active-transfer
+structures (finished windows are heap-expired once no future transfer on
+that link can start before their end, so memory stays bounded by the live
+concurrency instead of the whole history).  Per-op interface/compute
+costs are schedule-independent and are computed once per device cost
+signature, outside the loop.  Linear-chain programs (the ``from_hlo``
+macro-op shape and token-by-token decode) take a prefix-sum fast path
+that reproduces the event loop bit-for-bit whenever the chain resolves to
+one device cost signature and one link.  ``prepare()`` lets callers
+(``repro.sim.sweep``) share the dependency bookkeeping across many
 configs of the same program.
 
-Contention sampling semantics.  ``contention_factor`` is evaluated once, at
-a transfer's *start instant*: the factor counts the transfers already in
-flight at that moment and is locked in for the whole window.  A long
-transfer that later overlaps newly issued ones is NOT retroactively slowed
-— only the newcomers see the congestion.  This start-instant convention is
-deliberate: it keeps single-chain programs exactly equal to the closed-form
-interface sums (each transfer starts alone, factor 1), and it mirrors a
-bandwidth reservation made at issue time.  Studies that need time-resolved
-sharing can shrink op granularity (smaller tiles -> shorter windows) until
-the sampling error vanishes.
+Contention sampling semantics.  ``contention_factor`` is evaluated once,
+at a transfer's *start instant*: the factor counts the transfers already
+in flight on the same link at that moment and is locked in for the whole
+window.  A long transfer that later overlaps newly issued ones is NOT
+retroactively slowed — only the newcomers see the congestion.  This
+start-instant convention is deliberate: it keeps single-chain programs
+exactly equal to the closed-form interface sums (each transfer starts
+alone, factor 1), and it mirrors a bandwidth reservation made at issue
+time.  Studies that need time-resolved sharing can shrink op granularity
+(smaller tiles -> shorter windows) until the sampling error vanishes.
 """
 from __future__ import annotations
 
 from bisect import bisect_right, insort
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
+from functools import lru_cache
 from heapq import heapify, heappop, heappush
 from itertools import accumulate
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, NamedTuple, Optional, Tuple
 
 from repro.core.energy import DEFAULT_ENERGY, EnergyModel
 from repro.core.timeline import Event, Timeline
 from repro.sim import hw, report
+from repro.sim.hw import Device, Link, SoCTopology
 from repro.sim.ir import CostedOp, Program
 
 
@@ -92,6 +103,9 @@ INTERFACES: Dict[str, Callable] = {
 
 @dataclass(frozen=True)
 class EngineConfig:
+    # flat SoC description; ``topology`` below supersedes ``n_workers`` /
+    # ``hbm_ports`` when set (the flat fields remain the inheritance
+    # defaults for Device/Link fields left as None)
     n_workers: int = 1
     interface: str = "hbm"            # hbm | dma | acp | ideal
     peak_flops: float = hw.PEAK_FLOPS
@@ -119,12 +133,172 @@ class EngineConfig:
     dma_transfer_bytes: float = 64 * 1024
     energy: EnergyModel = DEFAULT_ENERGY
     n_chips: int = 1
+    # heterogeneous SoC: per-device/per-link model (None = the homogeneous
+    # expansion of the fields above; see hw.SoCTopology)
+    topology: Optional[SoCTopology] = None
 
     @property
     def overlap(self) -> bool:
         if self.overlap_transfers is None:
             return self.interface != "dma"
         return self.overlap_transfers
+
+    def resolved_topology(self) -> SoCTopology:
+        """The topology this config simulates: ``topology`` as given, or
+        the homogeneous expansion of the flat fields."""
+        if self.topology is not None:
+            return self.topology
+        return SoCTopology.homogeneous(self.n_workers)
+
+
+# ---------------------------------------------------------------------------
+# device/link resolution (None fields inherit the flat config)
+
+
+def _device_config(config: EngineConfig, topo: SoCTopology,
+                   dev: Device) -> EngineConfig:
+    """Effective cost parameters for ``dev``: every ``None`` field falls
+    back to the flat config (device hbm_bw > link bandwidth > config).
+    Returns ``config`` itself when nothing differs, so the homogeneous
+    expansion charges literally the same floats as the flat engine."""
+    link = topo.link_for(dev)
+    iface = dev.interface if dev.interface is not None else config.interface
+    peak = dev.peak_flops if dev.peak_flops is not None \
+        else config.peak_flops
+    scale = dev.datapath_scale if dev.datapath_scale is not None \
+        else config.datapath_scale
+    bw = dev.hbm_bw if dev.hbm_bw is not None else (
+        link.bandwidth if link.bandwidth is not None else config.hbm_bw)
+    vmem = dev.vmem_bw if dev.vmem_bw is not None else config.vmem_bw
+    if (iface == config.interface and peak == config.peak_flops
+            and scale == config.datapath_scale and bw == config.hbm_bw
+            and vmem == config.vmem_bw):
+        return config
+    return replace(config, interface=iface, peak_flops=peak,
+                   datapath_scale=scale, hbm_bw=bw, vmem_bw=vmem)
+
+
+def _link_ports(config: EngineConfig, link: Link) -> float:
+    return link.ports if link.ports is not None else config.hbm_ports
+
+
+class _Resolved(NamedTuple):
+    """Schedule-independent device/link resolution of one config: worker
+    names, per-device cost-signature indices, the signature configs, and
+    the link partition.  A pure function of the (frozen) config, so it is
+    memoized — benchmark loops re-running one config skip the rebuild."""
+    worker_names: Tuple[str, ...]
+    dev_sig: Tuple[int, ...]
+    sig_cfgs: Tuple[EngineConfig, ...]
+    link_of_dev: Tuple[int, ...]
+    ports_l: Tuple[float, ...]
+    devs_on_link: Tuple[Tuple[int, ...], ...]
+
+
+def _resolve_build(config: EngineConfig, topo: SoCTopology) -> _Resolved:
+    devices = topo.devices
+    sig_cfgs: List[EngineConfig] = []
+    sig_key: Dict[tuple, int] = {}
+    dev_sig: List[int] = []
+    for d in devices:
+        eff = _device_config(config, topo, d)
+        key = (eff.interface, eff.peak_flops, eff.datapath_scale,
+               eff.hbm_bw, eff.vmem_bw)
+        si = sig_key.get(key)
+        if si is None:
+            si = sig_key[key] = len(sig_cfgs)
+            sig_cfgs.append(eff)
+        dev_sig.append(si)
+    link_objs: List[Link] = []
+    link_idx: Dict[str, int] = {}
+    link_of_dev: List[int] = []
+    for d in devices:
+        l = topo.link_for(d)
+        li = link_idx.get(l.name)
+        if li is None:
+            li = link_idx[l.name] = len(link_objs)
+            link_objs.append(l)
+        link_of_dev.append(li)
+    n = len(devices)
+    return _Resolved(
+        worker_names=tuple(d.name for d in devices),
+        dev_sig=tuple(dev_sig),
+        sig_cfgs=tuple(sig_cfgs),
+        link_of_dev=tuple(link_of_dev),
+        ports_l=tuple(_link_ports(config, l) for l in link_objs),
+        devs_on_link=tuple(
+            tuple(w for w in range(n) if link_of_dev[w] == li)
+            for li in range(len(link_objs))))
+
+
+@lru_cache(maxsize=256)
+def _resolve_cached(config: EngineConfig) -> _Resolved:
+    return _resolve_build(config, config.resolved_topology())
+
+
+def _resolve(config: EngineConfig, topo: SoCTopology) -> _Resolved:
+    try:
+        return _resolve_cached(config)
+    except TypeError:       # unhashable field (e.g. a custom EnergyModel)
+        return _resolve_build(config, topo)
+
+
+@lru_cache(maxsize=1024)
+def _cand_cached(topo: SoCTopology, device_class: str) -> Tuple[int, ...]:
+    return topo.candidate_indices(device_class)
+
+
+def _ref_accel_config(config: EngineConfig,
+                      topo: SoCTopology) -> EngineConfig:
+    """The aggregate-reporting device: the first accelerator (else the
+    first device).  The Fig-1 dot-hiding budget and the closed-form
+    roofline terms are evaluated with its parameters."""
+    for d in topo.devices:
+        if d.kind == "accel":
+            return _device_config(config, topo, d)
+    return _device_config(config, topo, topo.devices[0])
+
+
+def _class_params(config: EngineConfig, device_class: str
+                  ) -> Tuple[EngineConfig, float]:
+    """(effective config, link ports) of ``device_class``'s reference
+    device — what ``chain_op_costs`` charges an op of that class."""
+    if config.topology is None:
+        return config, config.hbm_ports
+    try:
+        return _class_params_cached(config, device_class)
+    except TypeError:       # unhashable field (e.g. a custom EnergyModel)
+        return _class_params_build(config, device_class)
+
+
+def _class_params_build(config: EngineConfig, device_class: str
+                        ) -> Tuple[EngineConfig, float]:
+    topo = config.topology
+    dev = topo.devices[topo.candidate_indices(device_class)[0]]
+    return (_device_config(config, topo, dev),
+            _link_ports(config, topo.link_for(dev)))
+
+
+@lru_cache(maxsize=512)
+def _class_params_cached(config: EngineConfig, device_class: str
+                         ) -> Tuple[EngineConfig, float]:
+    return _class_params_build(config, device_class)
+
+
+def uniform_class_params(config: EngineConfig, device_class: str) -> bool:
+    """True when every candidate device of ``device_class`` shares one
+    cost signature and link — the precondition for ``chain_op_costs`` to
+    price an op exactly as the engine will charge it regardless of which
+    device of the class the op lands on (``simulate_serving`` requires
+    this of the accelerator pool)."""
+    topo = config.resolved_topology()
+    sigs = set()
+    for i in topo.candidate_indices(device_class):
+        d = topo.devices[i]
+        e = _device_config(config, topo, d)
+        sigs.add((e.interface, e.peak_flops, e.datapath_scale, e.hbm_bw,
+                  e.vmem_bw, topo.link_for(d).name))
+    return len(sigs) <= 1
 
 
 @dataclass
@@ -145,18 +319,46 @@ class EngineResult:
     def per_phase(self) -> Dict[str, float]:
         return report.aggregate(self.timeline.events, "phase")
 
-    def utilization(self, worker: Optional[str] = None) -> float:
-        """Accelerator-worker utilization (the host and ICI lanes are
-        resources, not workers — they don't dilute the denominator).
+    @property
+    def per_device(self) -> Dict[str, Dict[str, float]]:
+        """kind -> seconds per device (host and ICI lanes included as
+        pseudo-devices) — the per-device view of the breakdown."""
+        return report.per_device(self.timeline.events)
 
-        The denominator is ``config.n_workers``: a provisioned worker that
-        never receives an op is idle capacity and must count, otherwise a
-        run that strands workers overstates its utilization."""
+    def device_breakdowns(self) -> Dict[str, report.Breakdown]:
+        """Fig-1 style Breakdown per device (the run-level host floor is
+        not attributed to any single device)."""
+        return report.device_breakdowns(self.timeline.events)
+
+    def device_utilization(self) -> Dict[str, float]:
+        """Busy fraction of the makespan per topology device (provisioned
+        devices that never ran an op report 0.0)."""
+        mk = self.timeline.makespan
+        busy: Dict[str, float] = {}
+        for e in self.timeline.events:
+            if e.kind != "idle":
+                busy[e.worker] = busy.get(e.worker, 0.0) + e.duration
+        return {d.name: (busy.get(d.name, 0.0) / mk if mk else 0.0)
+                for d in self.config.resolved_topology().devices}
+
+    def utilization(self, worker: Optional[str] = None) -> float:
+        """Accelerator-device utilization (the host, ICI lanes and the
+        CPU/DSP frontend devices are resources, not accelerators — they
+        don't dilute the denominator).
+
+        The denominator is the topology's accelerator count: a
+        provisioned accelerator that never receives an op is idle
+        capacity and must count, otherwise a run that strands devices
+        overstates its utilization."""
         if worker is not None:
             return self.timeline.utilization(worker)
+        topo = self.config.resolved_topology()
+        accel = {d.name for d in topo.devices if d.kind == "accel"}
+        if not accel:
+            accel = {d.name for d in topo.devices}
         busy = sum(e.duration for e in self.timeline.events
-                   if e.worker.startswith("acc") and e.kind != "idle")
-        total = self.timeline.makespan * max(self.config.n_workers, 1)
+                   if e.worker in accel and e.kind != "idle")
+        total = self.timeline.makespan * len(accel)
         return busy / total if total else 0.0
 
 
@@ -239,21 +441,25 @@ def chain_op_costs(op: CostedOp, config: EngineConfig
     """(host, transfer, compute, collective) seconds ``op`` adds to a pure
     linear chain under ``config`` — the exact per-op terms of the chain
     fast path (every transfer starts alone, so the contention factor is 1
-    unless ``hbm_ports`` is fractional).
+    unless the op's link has fractional ports).
 
-    Adding the four terms left-to-right per op, in op order, reproduces the
-    engine's chain prefix sum bit-for-bit; the serving scheduler
+    Device-aware: the transfer/compute terms are charged at the
+    parameters of the op's ``device_class`` reference device in
+    ``config.topology`` (flat configs resolve to the config itself).
+    Adding the four terms left-to-right per op, in op order, reproduces
+    the engine's chain prefix sum bit-for-bit; the serving scheduler
     (``repro.sim.serving``) uses this to advance its simulated clock with
     precisely the costs ``run()`` will charge for the same ops.
     """
+    eff, ports = _class_params(config, op.device_class)
     host = config.host_dispatch_s + (
         op.bytes / config.host_bw / config.host_threads
         if config.host_bw else 0.0)
-    _, exposed, _ = _transfer_base(op, config, INTERFACES[config.interface])
-    if exposed > 0.0 and config.hbm_ports > 0:
-        exposed *= max(1.0, 1 / config.hbm_ports)
+    _, exposed, _ = _transfer_base(op, eff, INTERFACES[eff.interface])
+    if exposed > 0.0 and ports > 0:
+        exposed *= max(1.0, 1 / ports)
     comp = (op.duration_s if op.duration_s is not None
-            else op.flops / config.peak_flops)
+            else op.flops / eff.peak_flops)
     coll = (op.collective_bytes / config.ici_bw
             if op.collective_bytes > 0.0 else 0.0)
     return host, exposed, comp, coll
@@ -263,20 +469,32 @@ def chain_op_costs(op: CostedOp, config: EngineConfig
 # the executor
 
 
-def run(program: Program, config: EngineConfig = EngineConfig(), *,
+def run(program: Program, config: Optional[EngineConfig] = None, *,
         model_flops: float = 0.0, host_s: Optional[float] = None,
         plan: Optional[Plan] = None, fast: Optional[bool] = None
         ) -> EngineResult:
     """Simulate ``program`` on ``config``; returns every metric of the run.
 
+    ``config``: ``None`` means a fresh default ``EngineConfig()`` (a
+    ``None`` sentinel, so no module-level instance is shared between
+    callers).
     ``host_s``: roofline host floor (defaults to ``config.host_floor_s``).
     ``plan``: precomputed ``prepare(program)`` (sweep layer shares it).
     ``fast``: force (True) or forbid (False) the linear-chain prefix-sum
     path; default auto-detects.  Both paths are bit-identical.
     """
+    if config is None:
+        config = EngineConfig()
     if config.interface not in INTERFACES:
         raise ValueError(f"unknown interface {config.interface!r}; "
                          f"one of {sorted(INTERFACES)}")
+    topo = config.resolved_topology()
+    if config.topology is not None:
+        for d in topo.devices:
+            if d.interface is not None and d.interface not in INTERFACES:
+                raise ValueError(
+                    f"device {d.name!r}: unknown interface "
+                    f"{d.interface!r}; one of {sorted(INTERFACES)}")
     if plan is None:
         plan = prepare(program)
     if not plan.roots and program.ops:
@@ -286,27 +504,26 @@ def run(program: Program, config: EngineConfig = EngineConfig(), *,
         fast = plan.is_chain
     if (fast and plan.is_chain and program.ops
             and type(config.energy) is EnergyModel):
-        out = _run_chain(program, config)
+        out = _run_chain(program, config, topo)
         if out is not None:
             tl, iface_time_total, transfer_energy, makespan, kinds = out
-            return _finalize(tl, program, config, plan, iface_time_total,
-                             transfer_energy, model_flops, host_floor,
-                             makespan=makespan, kinds=kinds)
+            return _finalize(tl, program, config, topo, plan,
+                             iface_time_total, transfer_energy, model_flops,
+                             host_floor, makespan=makespan, kinds=kinds)
     tl, iface_time_total, transfer_energy = _run_events(
-        program, config, plan)
-    return _finalize(tl, program, config, plan, iface_time_total,
+        program, config, plan, topo)
+    return _finalize(tl, program, config, topo, plan, iface_time_total,
                      transfer_energy, model_flops, host_floor)
 
 
-def _run_events(program: Program, config: EngineConfig,
-                plan: Plan) -> Tuple[Timeline, float, float]:
-    """General DAG executor: heap ready queue + incremental contention."""
-    iface = INTERFACES[config.interface]
+def _run_events(program: Program, config: EngineConfig, plan: Plan,
+                topo: SoCTopology) -> Tuple[Timeline, float, float]:
+    """General DAG executor: heap ready queue, per-device placement,
+    per-link incremental contention."""
     tl = Timeline()
     events = tl.events
-    n = max(config.n_workers, 1)
+    n = len(topo.devices)
     avail = [0.0] * n
-    worker_names = [f"acc{i}" for i in range(n)]
     affinity_worker: Dict[str, int] = {}
     done: Dict[str, float] = {}
     host_free = 0.0
@@ -318,35 +535,91 @@ def _run_events(program: Program, config: EngineConfig,
     consumers = plan.consumers
     n_waiting = dict(plan.n_waiting)
 
-    # hoisted per-op costs (schedule-independent)
-    peak = config.peak_flops
-    comp_s = {nm: (op.duration_s if op.duration_s is not None
-                   else op.flops / peak) for nm, op in ops.items()}
-    xfer_base = {nm: _transfer_base(op, config, iface)
-                 for nm, op in ops.items()}
+    # per-device cost signatures + link partition (memoized per config;
+    # the homogeneous expansion has exactly one signature: the flat
+    # config itself, and one shared link)
+    worker_names, dev_sig, sig_cfgs, link_of_dev, ports_l, devs_on_link \
+        = _resolve(config, topo)
+    nlinks = len(ports_l)
+
+    # placement classes -> candidate device indices (least-loaded within)
+    cand: Dict[str, Tuple[int, ...]] = {}
+    for p_op in program.ops:
+        c = p_op.device_class
+        if c not in cand:
+            cand[c] = _cand_cached(topo, c)
+    ref_sig = {c: dev_sig[idxs[0]] for c, idxs in cand.items()}
+
+    # hoisted per-op costs (schedule-independent), one table per
+    # signature.  The single-signature case (every homogeneous run, and
+    # any topology whose devices share one cost profile) keeps the flat
+    # engine's two dict comprehensions; the general case fills each
+    # signature's table only with the ops that can actually land on a
+    # device of that signature — an op reaches its own class's candidate
+    # devices, plus (when an affinity key is shared across classes) the
+    # devices the key's other classes can pin it to.
+    if len(sig_cfgs) == 1:
+        eff0 = sig_cfgs[0]
+        iface0 = INTERFACES[eff0.interface]
+        peak0 = eff0.peak_flops
+        comp_sig: List[Optional[Dict[str, float]]] = [
+            {nm: (op.duration_s if op.duration_s is not None
+                  else op.flops / peak0) for nm, op in ops.items()}]
+        xfer_sig: List[Optional[Dict[str, tuple]]] = [
+            {nm: _transfer_base(op, eff0, iface0)
+             for nm, op in ops.items()}]
+    else:
+        class_sigs = {c: frozenset(dev_sig[w] for w in idxs)
+                      for c, idxs in cand.items()}
+        aff_classes: Dict[str, set] = {}
+        for p_op in program.ops:
+            if p_op.affinity is not None:
+                aff_classes.setdefault(p_op.affinity, set()).add(
+                    p_op.device_class)
+        comp_sig = [None] * len(sig_cfgs)
+        xfer_sig = [None] * len(sig_cfgs)
+        sig_iface = [INTERFACES[c.interface] for c in sig_cfgs]
+        sig_peak = [c.peak_flops for c in sig_cfgs]
+        for nm, op in ops.items():
+            op_sigs = class_sigs[op.device_class]
+            if (op.affinity is not None
+                    and len(aff_classes[op.affinity]) > 1):
+                op_sigs = frozenset().union(
+                    *(class_sigs[c] for c in aff_classes[op.affinity]))
+            dur = op.duration_s
+            for si in op_sigs:
+                if comp_sig[si] is None:
+                    comp_sig[si] = {}
+                    xfer_sig[si] = {}
+                comp_sig[si][nm] = (dur if dur is not None
+                                    else op.flops / sig_peak[si])
+                xfer_sig[si][nm] = _transfer_base(op, sig_cfgs[si],
+                                                  sig_iface[si])
     host_dispatch = config.host_dispatch_s
     host_bw = config.host_bw
     host_threads = config.host_threads
 
-    # active-transfer structure for HBM-port contention: two sorted arrays
-    # answer "how many windows are live at t" in O(log k); a heap keyed on
-    # window end expires history once no future transfer can start before
-    # it (every future start >= min(avail), which only grows), so the
-    # structure tracks live concurrency instead of the whole run history.
+    # per-link active-transfer structure for port contention: two sorted
+    # arrays answer "how many windows are live at t" in O(log k); a heap
+    # keyed on window end expires history once no future transfer on the
+    # link can start before it (every future start >= the expiry bound of
+    # the link's devices, which only grows), so each structure tracks live
+    # concurrency instead of the whole run history.
     # NOTE: contention is sampled once, at the transfer's START INSTANT,
     # and locked in for the window (see module header for the semantics).
-    ports = config.hbm_ports
-    xfer_starts: List[float] = []
-    xfer_ends: List[float] = []
-    window_heap: List[Tuple[float, float]] = []     # (end, start)
-    compact_at = 64
+    xfer_starts: List[List[float]] = [[] for _ in range(nlinks)]
+    xfer_ends: List[List[float]] = [[] for _ in range(nlinks)]
+    window_heap: List[List[Tuple[float, float]]] = [[] for _ in
+                                                    range(nlinks)]
+    compact_at = [64] * nlinks
     # expiry bookkeeping: a future transfer can start no earlier than the
-    # avail of the worker it lands on.  While any remaining op is
+    # avail of the device it lands on.  While any remaining op is
     # "unrestricted" (no affinity, or an affinity key not yet pinned) it
-    # may land on the globally least-loaded worker, so the safe expiry
-    # bound is min(avail); once every remaining op is pinned, only the
-    # pinned workers' avail matters — idle provisioned workers no longer
-    # freeze the bound at 0 and the history stays compactable.
+    # may land on the least-loaded device of its class, so the safe expiry
+    # bound for a link is min(avail) over the link's devices; once every
+    # remaining op is pinned, only the pinned devices' avail matters —
+    # idle provisioned devices no longer freeze the bound at 0 and the
+    # history stays compactable.
     aff_remaining: Dict[str, int] = {}
     n_unrestricted = 0
     for p_op in program.ops:
@@ -357,25 +630,36 @@ def _run_events(program: Program, config: EngineConfig,
                 aff_remaining.get(p_op.affinity, 0) + 1
     n_unrestricted += sum(aff_remaining.values())
 
-    def _expiry_bound() -> float:
+    def _expiry_bound(li: int) -> float:
+        dl = devs_on_link[li]
         if n_unrestricted > 0:
-            return min(avail)
+            return min(avail[w] for w in dl)
         live_workers = set()
         for k, c in aff_remaining.items():
             if c > 0:
                 pinned = affinity_worker.get(k)
                 if pinned is None:          # outstanding unpinned key:
-                    return min(avail)       # it may land anywhere
-                live_workers.add(pinned)
+                    return min(avail[w] for w in dl)   # may land anywhere
+                if link_of_dev[pinned] == li:
+                    live_workers.add(pinned)
         if not live_workers:
             return float("inf")             # no transfer can query again
         return min(avail[w] for w in live_workers)
+
+    # heap priority: compute time at the op's class reference device
+    # (schedule-independent; exact LPT on uniform classes) — a bare
+    # table lookup when there is only one signature
+    if len(sig_cfgs) == 1:
+        _prio = comp_sig[0].__getitem__
+    else:
+        def _prio(nm: str) -> float:
+            return comp_sig[ref_sig[ops[nm].device_class]][nm]
 
     # max-heap ready queue keyed on compute time: replicates the legacy
     # per-wave LPT sort exactly — ``seq`` reproduces the stable-sort tie
     # order (insertion order within a wave), and newly readied ops wait in
     # ``next_wave`` until the current wave drains, like the old list swap.
-    heap = [(-comp_s[nm], i, nm) for i, nm in enumerate(plan.roots)]
+    heap = [(-_prio(nm), i, nm) for i, nm in enumerate(plan.roots)]
     heapify(heap)
     seq = len(heap)
     next_wave: List[Tuple[float, int, str]] = []
@@ -385,11 +669,13 @@ def _run_events(program: Program, config: EngineConfig,
         _, _, nm = heappop(heap)
         op = ops[nm]
         aff = op.affinity
+        cds = cand[op.device_class]
         if aff is not None and aff in affinity_worker:
             w = affinity_worker[aff]
             aff_remaining[aff] -= 1
         else:
-            w = min(range(n), key=avail.__getitem__)
+            w = cds[0] if len(cds) == 1 else min(cds,
+                                                 key=avail.__getitem__)
             if aff is not None:
                 affinity_worker[aff] = w
                 # this key's ops are henceforth restricted to worker w
@@ -397,6 +683,7 @@ def _run_events(program: Program, config: EngineConfig,
                 aff_remaining[aff] -= 1
             else:
                 n_unrestricted -= 1
+        si = dev_sig[w]
         dep_ready = max((done[d] for d in op.deps if d in done),
                         default=0.0)
         t = avail[w] if avail[w] > dep_ready else dep_ready
@@ -411,37 +698,41 @@ def _run_events(program: Program, config: EngineConfig,
             host_free = h0 + host_cost
             if host_free > t:
                 t = host_free
-        # staged input transfer, with HBM-port contention
-        full, xfer, xe = xfer_base[nm]
+        # staged input transfer, with per-link port contention
+        full, xfer, xe = xfer_sig[si][nm]
         transfer_energy += xe
         if xfer > 0.0:
+            li = link_of_dev[w]
+            ports = ports_l[li]
             if ports <= 0:
                 factor = 1.0
             else:
-                live = (1 + bisect_right(xfer_starts, t)
-                        - bisect_right(xfer_ends, t))
+                live = (1 + bisect_right(xfer_starts[li], t)
+                        - bisect_right(xfer_ends[li], t))
                 factor = max(1.0, live / ports)
             xfer *= factor
             events.append(Event(worker_names[w], f"{nm}:xfer", t, xfer,
                                 "transfer", op.phase))
             end = t + xfer
-            insort(xfer_starts, t)
-            insort(xfer_ends, end)
-            heappush(window_heap, (end, t))
-            if len(window_heap) >= compact_at:
+            insort(xfer_starts[li], t)
+            insort(xfer_ends[li], end)
+            heappush(window_heap[li], (end, t))
+            if len(window_heap[li]) >= compact_at[li]:
                 # expire windows no future transfer can overlap: every
-                # future start is >= the expiry bound, and avail only grows
-                bound = _expiry_bound()
-                while window_heap and window_heap[0][0] <= bound:
-                    heappop(window_heap)
-                xfer_starts = sorted(s for (_, s) in window_heap)
-                xfer_ends = sorted(e for (e, _) in window_heap)
-                compact_at = max(64, 2 * len(window_heap))
+                # future start on this link is >= its expiry bound, and
+                # avail only grows
+                bound = _expiry_bound(li)
+                wh = window_heap[li]
+                while wh and wh[0][0] <= bound:
+                    heappop(wh)
+                xfer_starts[li] = sorted(s for (_, s) in wh)
+                xfer_ends[li] = sorted(e for (e, _) in wh)
+                compact_at[li] = max(64, 2 * len(wh))
             iface_time_total += full * factor
             t = end
         else:
             iface_time_total += full
-        comp = comp_s[nm]
+        comp = comp_sig[si][nm]
         events.append(Event(worker_names[w], nm, t, comp, "compute",
                             op.phase))
         t += comp
@@ -461,7 +752,7 @@ def _run_events(program: Program, config: EngineConfig,
         for cn in consumers.get(nm, ()):
             n_waiting[cn] -= 1
             if n_waiting[cn] == 0:
-                next_wave.append((-comp_s[cn], seq, cn))
+                next_wave.append((-_prio(cn), seq, cn))
                 seq += 1
         if not heap and next_wave:
             heap = next_wave
@@ -476,8 +767,7 @@ def _run_events(program: Program, config: EngineConfig,
 # linear-chain fast path: the whole schedule is one prefix sum
 
 
-def _run_chain(program: Program,
-               config: EngineConfig
+def _run_chain(program: Program, config: EngineConfig, topo: SoCTopology
                ) -> Optional[Tuple[Timeline, float, float, float,
                                    Dict[str, float]]]:
     """Vectorized executor for pure chains — bit-identical to the event
@@ -487,14 +777,40 @@ def _run_chain(program: Program,
     (host, transfer, compute, collective) durations, in the exact addition
     order of the loop.  Costs are computed with the same IEEE operations
     as the scalar interface models.  Returns None to fall back when an op
-    carries a cost the vectorized model can't mirror (negative/non-finite).
+    carries a cost the vectorized model can't mirror (negative/non-finite)
+    or when the chain's placement classes resolve to more than one device
+    cost signature or link (the event loop handles those heterogeneous
+    chains).
     """
     import numpy as np
 
     ops = program.ops
     m = len(ops)
     em = config.energy
-    peak = config.peak_flops
+
+    # resolve the chain's placement: the vectorized model mirrors exactly
+    # one device cost signature on one link
+    cand: Dict[str, Tuple[int, ...]] = {}
+    for op in ops:
+        c = op.device_class
+        if c not in cand:
+            cand[c] = topo.candidate_indices(c)
+    used = sorted({w for idxs in cand.values() for w in idxs})
+    eff = link = None
+    for w in used:
+        d = topo.devices[w]
+        e = _device_config(config, topo, d)
+        l = topo.link_for(d)
+        if eff is None:
+            eff, link = e, l
+        elif (e.interface != eff.interface
+              or e.peak_flops != eff.peak_flops
+              or e.datapath_scale != eff.datapath_scale
+              or e.hbm_bw != eff.hbm_bw or e.vmem_bw != eff.vmem_bw
+              or l.name != link.name):
+            return None
+    ports = _link_ports(config, link)
+    peak = eff.peak_flops
 
     flops = np.array([op.flops for op in ops], dtype=np.float64)
     dot = np.array([op.dot_flops for op in ops], dtype=np.float64)
@@ -511,9 +827,9 @@ def _run_chain(program: Program,
 
         # interface time/energy for the bytes path — same formulas, same
         # operation order as core.interfaces / EnergyModel, elementwise
-        iface = config.interface
+        iface = eff.interface
         if iface == "hbm":
-            t_if = nb / config.hbm_bw
+            t_if = nb / eff.hbm_bw
             e_if = (nb * em.pj_per_byte_hbm) * 1e-12
         elif iface == "ideal":
             t_if = np.zeros(m)
@@ -521,22 +837,22 @@ def _run_chain(program: Program,
         elif iface == "dma":
             from repro.core.interfaces import DMA_LAUNCH_S, FLUSH_PER_BYTE
             n_tr = np.maximum(1.0,
-                              np.floor_divide(nb, config.dma_transfer_bytes))
-            t_if = (2 * nb / config.hbm_bw + n_tr * DMA_LAUNCH_S
+                              np.floor_divide(nb, eff.dma_transfer_bytes))
+            t_if = (2 * nb / eff.hbm_bw + n_tr * DMA_LAUNCH_S
                     + nb * FLUSH_PER_BYTE)
             e_if = ((2 * nb) * em.pj_per_byte_hbm) * 1e-12 \
                 + ((nb * 0.05) * em.pj_per_byte_host) * 1e-12
         elif iface == "acp":
-            res_frac = np.where(nb < config.vmem_resident_bytes, 1.0, 0.5)
+            res_frac = np.where(nb < eff.vmem_resident_bytes, 1.0, 0.5)
             spill = nb * (1.0 - res_frac)
-            t_if = (nb * res_frac) / config.vmem_bw \
-                + 2 * spill / config.hbm_bw
+            t_if = (nb * res_frac) / eff.vmem_bw \
+                + 2 * spill / eff.hbm_bw
             e_if = ((2 * nb * res_frac) * em.pj_per_byte_vmem) * 1e-12 \
                 + ((2 * spill) * em.pj_per_byte_hbm) * 1e-12
         else:                               # registered custom interface
             return None
-        t_if = t_if / config.datapath_scale
-        if config.overlap:
+        t_if = t_if / eff.datapath_scale
+        if eff.overlap:
             expo_if = np.maximum(t_if - dot / peak, 0.0)
         else:
             expo_if = t_if
@@ -544,14 +860,14 @@ def _run_chain(program: Program,
         zero_b = nb == 0.0
         full = np.where(has_tov, tov, np.where(zero_b, 0.0, t_if))
         expo = np.where(has_tov, tov, np.where(zero_b, 0.0, expo_if))
-        xe = np.where(has_tov, ((tov * config.hbm_bw) * em.pj_per_byte_hbm)
+        xe = np.where(has_tov, ((tov * eff.hbm_bw) * em.pj_per_byte_hbm)
                       * 1e-12, np.where(zero_b, 0.0, e_if))
 
         # chain transfers never overlap -> every window sees live == 1
-        if config.hbm_ports <= 0:
+        if ports <= 0:
             factor = 1.0
         else:
-            factor = max(1.0, 1 / config.hbm_ports)
+            factor = max(1.0, 1 / ports)
         has_x = expo > 0.0
         xfer = np.where(has_x, expo * factor, 0.0)
 
@@ -575,21 +891,21 @@ def _run_chain(program: Program,
     # addition order (numpy reductions may re-associate)
     cum = list(accumulate(flat.tolist()))
 
-    # worker labels: timing is worker-independent on a chain, but the
-    # argmin assignment (ties -> lowest index) must be replayed for
-    # bit-identical event rows
-    n = max(config.n_workers, 1)
+    # worker labels: timing is device-independent on a uniform chain, but
+    # the least-loaded assignment within each op's class (ties -> lowest
+    # index) must be replayed for bit-identical event rows
+    n = len(topo.devices)
     if n == 1:
         widx = [0] * m
     else:
         avail = [0.0] * n
-        rng = range(n)
         widx = []
         for i in range(m):
-            w = min(rng, key=avail.__getitem__)
+            cs = cand[ops[i].device_class]
+            w = cs[0] if len(cs) == 1 else min(cs, key=avail.__getitem__)
             avail[w] = cum[4 * i + 2]       # end of this op's compute
             widx.append(w)
-    worker_names = [f"acc{i}" for i in range(n)]
+    worker_names = [d.name for d in topo.devices]
 
     tl = Timeline()
     events = tl.events
@@ -656,9 +972,9 @@ def _run_chain(program: Program,
 
 
 def _finalize(tl: Timeline, program: Program, config: EngineConfig,
-              plan: Plan, iface_time_total: float, transfer_energy: float,
-              model_flops: float, host_floor: float, *,
-              makespan: Optional[float] = None,
+              topo: SoCTopology, plan: Plan, iface_time_total: float,
+              transfer_energy: float, model_flops: float,
+              host_floor: float, *, makespan: Optional[float] = None,
               kinds: Optional[Dict[str, float]] = None) -> EngineResult:
     if makespan is None:
         makespan = tl.makespan
@@ -671,18 +987,22 @@ def _finalize(tl: Timeline, program: Program, config: EngineConfig,
             transfer_s=kinds.get("transfer", 0.0),
             host_s=kinds.get("host", 0.0) + host_floor,
             collective_s=kinds.get("collective", 0.0))
-    if config.overlap:
+    # the aggregate-report device: Fig-1 dot-hiding budget and the closed
+    # form roofline are charged at the first accelerator's parameters
+    # (== the flat config on a homogeneous topology)
+    ref = _ref_accel_config(config, topo)
+    if ref.overlap:
         # the Fig-1 transfer phase applies the dot-hiding budget at the
         # aggregate level (like the closed form): memory time beyond the
         # program's total MXU time is exposed.  The timeline keeps the
         # per-op view; per-op exposure can only exceed this (Jensen).
         bd.transfer_s = max(
-            iface_time_total - totals["dot_flops"] / config.peak_flops,
+            iface_time_total - totals["dot_flops"] / ref.peak_flops,
             0.0)
     rl = report.roofline_from_totals(
         totals, host_s=host_floor, n_chips=config.n_chips,
-        model_flops=model_flops, peak_flops=config.peak_flops,
-        hbm_bw=config.hbm_bw, ici_bw=config.ici_bw)
+        model_flops=model_flops, peak_flops=ref.peak_flops,
+        hbm_bw=ref.hbm_bw, ici_bw=config.ici_bw)
     e_comp = config.energy.compute(totals["flops"])
     e_ici = config.energy.ici(totals["collective_bytes"])
     e_static = config.energy.static(makespan + host_floor, 1)

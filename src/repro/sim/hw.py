@@ -1,12 +1,170 @@
-"""Hardware constants shared by every cost path (TPU v5e, per assignment).
+"""Hardware model: canonical constants + the SoC topology layer.
 
-Single home for the numbers that used to be re-declared across
-``core/simulator.py``, ``core/interfaces.py`` and ``core/tiling.py``;
-those modules re-export them for backward compatibility.
+The constants (TPU v5e, per assignment) are the single home for numbers
+that used to be re-declared across ``core/simulator.py``,
+``core/interfaces.py`` and ``core/tiling.py``; those modules re-export
+them for backward compatibility.
+
+On top of the constants sits the **topology model**: a ``Device`` is one
+execution resource on the SoC (a CPU core cluster, an accelerator, a
+DSP), a ``Link`` is a shared data-movement resource (the HBM port pool,
+an ACP/DMA path), and an ``SoCTopology`` composes them.  SMAUG's case
+studies vary exactly this object — how many accelerators share how many
+memory ports, and which device runs the camera frontend — so the engine
+(``repro.sim.engine``) takes an ``EngineConfig.topology`` and schedules
+every ``CostedOp`` onto the device matching its ``device_class``,
+charging its traffic to that device's link.
+
+Inheritance convention: every ``Device``/``Link`` field that is ``None``
+falls back to the corresponding flat ``EngineConfig`` field, so the
+*homogeneous expansion* of a legacy config (``n_workers`` identical
+accelerators on one shared link) is ``SoCTopology.homogeneous(n)`` —
+and is bit-identical to the pre-topology engine by construction
+(asserted in ``tests/test_engine_equivalence.py``).
 """
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import lru_cache
+from typing import Dict, Optional, Tuple
 
 PEAK_FLOPS = 197e12          # bf16 per chip
 HBM_BW = 819e9               # bytes/s per chip
 ICI_BW = 50e9                # bytes/s per link
 VMEM_BW = 11e12              # effective on-chip bandwidth
 HOST_OVERHEAD_S = 50e-6      # per-step launch/framework floor (host runtime)
+
+# device kinds with modeled semantics; ``kind`` is open-ended (any string
+# works as a placement class), these are the conventional ones
+DEVICE_KINDS = ("cpu", "accel", "dsp")
+
+
+@dataclass(frozen=True)
+class Device:
+    """One execution resource on the SoC.
+
+    ``kind`` is the placement class ``CostedOp.device_class`` matches
+    against (``cpu`` | ``accel`` | ``dsp`` by convention).  Every
+    ``None`` field inherits the flat ``EngineConfig`` value, so a bare
+    ``Device("acc0")`` is exactly one of today's workers."""
+    name: str
+    kind: str = "accel"
+    peak_flops: Optional[float] = None       # None -> EngineConfig.peak_flops
+    datapath_scale: Optional[float] = None   # None -> EngineConfig value
+    interface: Optional[str] = None          # None -> EngineConfig.interface
+    hbm_bw: Optional[float] = None           # None -> link bw -> EngineConfig
+    vmem_bw: Optional[float] = None          # None -> EngineConfig.vmem_bw
+    link: Optional[str] = None               # Link name; None -> first link
+
+
+@dataclass(frozen=True)
+class Link:
+    """A shared data-movement resource (e.g. the HBM port pool).
+
+    ``ports`` has the engine's contention semantics: active transfers on
+    this link beyond ``ports`` share bandwidth (0 = uncontended,
+    fractional values model a link narrower than one device's demand).
+    ``bandwidth`` overrides the per-byte rate for devices on this link
+    (``None`` inherits ``EngineConfig.hbm_bw``)."""
+    name: str
+    bandwidth: Optional[float] = None        # None -> EngineConfig.hbm_bw
+    ports: Optional[float] = None            # None -> EngineConfig.hbm_ports
+
+
+_DEFAULT_LINK = Link("shared")
+
+
+@dataclass(frozen=True)
+class SoCTopology:
+    """Devices + links: the heterogeneous SoC the engine schedules onto.
+
+    A topology with no ``links`` declared has one implicit shared link
+    inheriting every ``EngineConfig`` value — today's single HBM port
+    pool.  Ops are placed on the devices whose ``kind`` equals their
+    ``device_class``; a class with no matching device falls back to the
+    accelerators (and then to every device), so programs tagged for a
+    richer SoC still run on a smaller one."""
+    devices: Tuple[Device, ...]
+    links: Tuple[Link, ...] = ()
+    name: str = "soc"
+
+    def __post_init__(self):
+        object.__setattr__(self, "devices", tuple(self.devices))
+        object.__setattr__(self, "links", tuple(self.links))
+        if not self.devices:
+            raise ValueError("SoCTopology needs at least one device")
+        names = [d.name for d in self.devices]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate device names in topology: {names}")
+        lnames = [l.name for l in self.links]
+        if len(set(lnames)) != len(lnames):
+            raise ValueError(f"duplicate link names in topology: {lnames}")
+        known = set(lnames)
+        for d in self.devices:
+            if d.link is not None and d.link not in known:
+                raise ValueError(
+                    f"device {d.name!r} references unknown link {d.link!r}")
+
+    # -- construction -------------------------------------------------------
+
+    @classmethod
+    def homogeneous(cls, n_workers: int, name: str = "") -> "SoCTopology":
+        """The homogeneous expansion of a flat config: ``n_workers``
+        identical accelerators (every field inherited) on one implicit
+        shared link — bit-identical to the pre-topology engine.
+
+        Memoized on the worker count (every ``run()`` of a flat config
+        resolves one, and the frozen instances are safely shareable), so
+        small-program runs don't pay device construction + validation."""
+        n = max(int(n_workers), 1)
+        if name:
+            return cls(devices=tuple(Device(f"acc{i}") for i in range(n)),
+                       name=name)
+        return _homogeneous_cached(n)
+
+    # -- queries ------------------------------------------------------------
+
+    def devices_of(self, kind: str) -> Tuple[Device, ...]:
+        return tuple(d for d in self.devices if d.kind == kind)
+
+    @property
+    def n_accel(self) -> int:
+        return sum(1 for d in self.devices if d.kind == "accel")
+
+    def kind_counts(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for d in self.devices:
+            out[d.kind] = out.get(d.kind, 0) + 1
+        return out
+
+    def describe(self) -> str:
+        """Compact label like ``1cpu+4accel`` (device-order stable)."""
+        counts = self.kind_counts()
+        return "+".join(f"{c}{k}" for k, c in counts.items())
+
+    def candidate_indices(self, device_class: str) -> Tuple[int, ...]:
+        """Device indices an op of ``device_class`` may be placed on:
+        exact kind match, else the accelerators, else every device."""
+        idx = tuple(i for i, d in enumerate(self.devices)
+                    if d.kind == device_class)
+        if not idx:
+            idx = tuple(i for i, d in enumerate(self.devices)
+                        if d.kind == "accel")
+        if not idx:
+            idx = tuple(range(len(self.devices)))
+        return idx
+
+    def link_for(self, device: Device) -> Link:
+        """The link this device's transfers traverse (declared by name,
+        else the topology's first link, else the implicit shared one)."""
+        if device.link is not None:
+            for l in self.links:
+                if l.name == device.link:
+                    return l
+        return self.links[0] if self.links else _DEFAULT_LINK
+
+
+@lru_cache(maxsize=128)
+def _homogeneous_cached(n: int) -> SoCTopology:
+    return SoCTopology(devices=tuple(Device(f"acc{i}") for i in range(n)),
+                       name=f"{n}accel")

@@ -4,7 +4,10 @@ A ``CostedOp`` carries everything the executor needs to place it in time:
 compute (flops, with the dot/MXU share split out), data movement (operand
 and result bytes, routed through the pluggable interface model), collective
 traffic (assignment-metric operand bytes plus ring-model wire bytes),
-scheduling structure (deps, reduction affinity), and a reporting phase.
+scheduling structure (deps, reduction affinity), a ``device_class``
+placement tag (which kind of ``SoCTopology`` device may run it — host
+preprocessing on the CPU, NN ops on the accelerators), and a reporting
+phase.
 
 Five lowerings produce ``Program``s:
 
@@ -46,6 +49,10 @@ class CostedOp:
     deps: Tuple[str, ...] = ()
     affinity: Optional[str] = None  # same key -> same worker queue
     phase: str = ""                 # reporting group (layer / figure phase)
+    # placement: which SoCTopology device kind may run this op ("cpu" |
+    # "accel" | "dsp"); a class with no matching device falls back to the
+    # accelerators, so flat configs behave exactly as before
+    device_class: str = "accel"
     # explicit-time overrides (legacy TileTask lowering; None = derive from
     # flops/bytes and the engine's hardware model)
     duration_s: Optional[float] = None
@@ -125,7 +132,8 @@ def _node_cost_parts(g, n, batch: int) -> Tuple[float, float, float]:
     return float(elems_out), bytes_out, bytes_out  # elementwise / pool / norm
 
 
-def from_graph(g, batch: int = 1, max_tile_elems: int = 16384) -> Program:
+def from_graph(g, batch: int = 1, max_tile_elems: int = 16384,
+               device_class: str = "accel") -> Program:
     """Lower a ``repro.core.graph.Graph`` to a tile-level Program.
 
     Each op is tiled by the dataflow tiling optimizer; tile *i* of a node
@@ -133,6 +141,11 @@ def from_graph(g, batch: int = 1, max_tile_elems: int = 16384) -> Program:
     start as soon as the matching producer tile lands).  Convolution tiles
     that cut the reduction dim share an affinity key: their partial sums
     reduce in place on one worker queue (the paper's Fig 14 effect).
+
+    ``device_class`` is the placement tag every lowered op carries: NN
+    graphs target the accelerators (the default); a preprocessing /
+    frontend graph can be lowered onto the ``"cpu"`` or ``"dsp"`` device
+    of a heterogeneous ``SoCTopology``.
     """
     import numpy as np
 
@@ -178,7 +191,8 @@ def from_graph(g, batch: int = 1, max_tile_elems: int = 16384) -> Program:
                 bytes_out=bytes_out / n_tiles,
                 deps=deps,
                 affinity=(name if reduce_aff else None),
-                phase=name))
+                phase=name,
+                device_class=device_class))
     return Program(ops, name=g.name, source="graph",
                    meta={"batch": batch, "max_tile_elems": max_tile_elems})
 
@@ -218,7 +232,8 @@ def from_hlo(hlo: Dict, n_ops: int = 8, name: str = "") -> Program:
             wire_bytes=wire / n_ops,
             transcendentals=trans / n_ops,
             deps=(f"step/{i-1}",) if i else (),
-            phase="step"))
+            phase="step",
+            device_class="accel"))
     return Program(ops, name=name or hlo.get("entry", "hlo"), source="hlo",
                    meta={"n_ops": n_ops})
 
@@ -285,7 +300,8 @@ def from_decode(cfg, n_tokens: int, *, seq_len: int = 1024, batch: int = 1,
                 bytes_in=bytes_in / ops_per_token,
                 bytes_out=bytes_out / ops_per_token,
                 deps=(prev,) if prev else (),
-                phase=f"tok{t}"))
+                phase=f"tok{t}",
+                device_class="accel"))
             prev = nm
     return Program(ops, name=name or f"{getattr(cfg, 'name', 'model')}"
                    f"/decode{n_tokens}", source="decode",
@@ -348,6 +364,7 @@ def from_serving_step(cfg, *, prefill_lens: Sequence[int] = (),
             bytes_in=weight_bytes,
             bytes_out=kv_entry * n_tok,
             phase=f"step{step}",
+            device_class="accel",
             ))
     if decode_positions:
         batch = float(len(decode_positions))
@@ -360,6 +377,7 @@ def from_serving_step(cfg, *, prefill_lens: Sequence[int] = (),
             bytes_out=kv_entry * batch,
             deps=(prev,) if prev else (),
             phase=f"step{step}",
+            device_class="accel",
             ))
     return Program(ops, name=name or f"{getattr(cfg, 'name', 'model')}"
                    f"/step{step}", source="serving",

@@ -91,6 +91,30 @@ def breakdown_from_events(events: Iterable,
         collective_s=kinds.get("collective", 0.0))
 
 
+def per_device(events: Iterable) -> Dict[str, Dict[str, float]]:
+    """Per-device kind->seconds aggregation of a simulated timeline: what
+    each ``SoCTopology`` device (plus the ``host`` and ``ici`` pseudo
+    lanes) spent its time on.  The heterogeneous analogue of
+    ``aggregate(events, "kind")``."""
+    out: Dict[str, Dict[str, float]] = {}
+    for e in events:
+        d = out.setdefault(e.worker, {})
+        d[e.kind] = d.get(e.kind, 0.0) + e.duration
+    return out
+
+
+def device_breakdowns(events: Iterable) -> Dict[str, Breakdown]:
+    """Fig-1 style ``Breakdown`` per device.  Host-dispatch events live on
+    the ``host`` lane, collectives on ``ici``, so a compute device's row
+    typically carries only its compute + transfer seconds; run-level host
+    floors are a whole-run property and are not attributed here."""
+    return {dev: Breakdown(accelerator_s=kinds.get("compute", 0.0),
+                           transfer_s=kinds.get("transfer", 0.0),
+                           host_s=kinds.get("host", 0.0),
+                           collective_s=kinds.get("collective", 0.0))
+            for dev, kinds in per_device(events).items()}
+
+
 def roofline_from_totals(totals: Dict[str, float], *, host_s: float,
                          n_chips: int = 1, model_flops: float = 0.0,
                          peak_flops: float = PEAK_FLOPS,

@@ -311,7 +311,7 @@ class _Slot:
 
 def simulate_serving(cfg, trace: Sequence[Request],
                      policy: BatchingPolicy,
-                     config: EngineConfig = EngineConfig(), *,
+                     config: Optional[EngineConfig] = None, *,
                      bytes_per_param: float = 2.0,
                      max_steps: int = 1_000_000,
                      name: str = "") -> ServingResult:
@@ -319,8 +319,24 @@ def simulate_serving(cfg, trace: Sequence[Request],
     header for the co-simulation semantics.
 
     ``cfg`` is a ``repro.core.config.ModelConfig`` (the served model);
-    ``bytes_per_param`` matches ``ir.from_decode``.  Raises RuntimeError
-    past ``max_steps`` iterations (a policy that stops making progress)."""
+    ``config`` defaults to a fresh ``EngineConfig()`` (``None`` sentinel —
+    no shared module-level instance); ``bytes_per_param`` matches
+    ``ir.from_decode``.  Raises RuntimeError past ``max_steps`` iterations
+    (a policy that stops making progress).
+
+    Heterogeneous topologies are supported as long as the accelerator
+    pool is uniform (one cost signature + link across the class's
+    candidate devices): ``chain_op_costs`` prices each op at the class's
+    reference device, so a mixed pool would silently break the
+    busy_s == engine.makespan invariant — it is rejected instead."""
+    if config is None:
+        config = EngineConfig()
+    if not engine.uniform_class_params(config, "accel"):
+        raise ValueError(
+            "serving co-simulation requires a uniform accelerator pool: "
+            "the topology's accel-class devices resolve to more than one "
+            "cost signature/link, so chain_op_costs cannot price ops "
+            "exactly as the engine would charge them")
     trace = sorted(trace, key=lambda r: (r.arrival_s, r.rid))
     if len({r.rid for r in trace}) != len(trace):
         raise ValueError("duplicate rid in trace; per-request metrics are "
@@ -462,7 +478,7 @@ def simulate_serving(cfg, trace: Sequence[Request],
 
 def serving_sweep(cfg, policies: Sequence[BatchingPolicy],
                   rates_rps: Sequence[float], *, n_requests: int = 64,
-                  config: EngineConfig = EngineConfig(),
+                  config: Optional[EngineConfig] = None,
                   trace_kind: str = "poisson", seed: int = 0,
                   bytes_per_param: float = 2.0,
                   **trace_kw) -> List[ServingResult]:
@@ -471,6 +487,8 @@ def serving_sweep(cfg, policies: Sequence[BatchingPolicy],
     the comparison isolates the policy).  Returns results in
     ``for rate: for policy:`` order; each carries its cell coordinates in
     ``result.meta``."""
+    if config is None:
+        config = EngineConfig()
     gen = TRACE_GENERATORS[trace_kind]
     out: List[ServingResult] = []
     for rate in rates_rps:

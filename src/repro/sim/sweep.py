@@ -21,13 +21,16 @@ downstream consumer (benchmarks, reports, figures) is unchanged.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Dict, Iterable, List, Optional, Sequence
 
 from repro.sim import engine, ir
 from repro.sim.engine import EngineConfig, EngineResult
+from repro.sim.hw import SoCTopology
 from repro.sim.ir import Program
 
-__all__ = ["sweep", "lower_graph", "lower_hlo", "as_records"]
+__all__ = ["sweep", "topology_sweep", "lower_graph", "lower_hlo",
+           "as_records"]
 
 _CACHE_MAX = 64
 
@@ -153,14 +156,31 @@ def sweep(program: Program, configs: Sequence[EngineConfig], *,
                      "one of serial|thread|process|auto")
 
 
+def topology_sweep(program: Program, topologies: Sequence[SoCTopology],
+                   base_config: Optional[EngineConfig] = None,
+                   **kw) -> List[EngineResult]:
+    """Run ``program`` on every ``SoCTopology`` of a grid: each topology
+    is installed into a copy of ``base_config`` (default: a fresh
+    ``EngineConfig()``) and the grid goes through ``sweep`` — one
+    lowering, one shared plan, one ``EngineResult`` per SoC.  The SMAUG
+    SoC-tuning studies (how many accelerators, which frontend device,
+    how many shared ports) are one call."""
+    base = base_config if base_config is not None else EngineConfig()
+    configs = [dataclasses.replace(base, topology=t) for t in topologies]
+    return sweep(program, configs, **kw)
+
+
 def as_records(results: Iterable[EngineResult]) -> List[Dict[str, float]]:
     """Flatten results to tidy per-config dicts (DataFrame-friendly)."""
     rows = []
     for r in results:
         c = r.config
+        topo = c.resolved_topology()
         rows.append({
             "program": r.program.name, "n_ops": len(r.program.ops),
             "interface": c.interface, "n_workers": c.n_workers,
+            "topology": topo.name if c.topology is not None else "flat",
+            "devices": topo.describe(), "n_accel": topo.n_accel,
             "hbm_ports": c.hbm_ports, "host_threads": c.host_threads,
             "datapath_scale": c.datapath_scale,
             "peak_flops": c.peak_flops,

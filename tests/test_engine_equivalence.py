@@ -1,18 +1,24 @@
 """The O(E log E) engine == the frozen PR-base loop, bit for bit.
 
-Three layers of evidence:
+Four layers of evidence:
 
   * seeded random DAGs and chains across interfaces / worker counts /
     contention / host models: Timeline, Breakdown, Roofline, energy and
     makespan all compare with ``==`` (no tolerance) against
     ``tests/_reference_engine.run_reference`` — for the heap event loop
     AND the numpy chain fast path;
-  * a hypothesis property test drawing arbitrary DAG shapes (skipped
+  * the homogeneous-topology gate: an explicit ``SoCTopology`` that is
+    the homogeneous expansion of a flat config (implicit inheritance AND
+    fully spelled-out device/link fields) is bit-identical to the flat
+    config — i.e. the per-device/per-link engine degenerates exactly to
+    the pre-topology engine;
+  * hypothesis property tests drawing arbitrary DAG shapes (skipped
     automatically when hypothesis isn't installed, via ``_hyp``);
   * the acceptance benchmark: a ≥5k-op transformer decode chain swept over
     8 configs through ``sweep()`` must be ≥10x faster than 8 serial
     PR-base runs, with bit-identical results.
 """
+import dataclasses
 import random
 import time
 
@@ -21,7 +27,7 @@ import pytest
 from _hyp import given, settings, st
 from _reference_engine import run_reference
 from repro.configs.gemma_2b import FULL as GEMMA_2B
-from repro.sim import engine, ir
+from repro.sim import engine, hw, ir
 from repro.sim.sweep import sweep
 
 CONFIGS = [
@@ -148,6 +154,59 @@ def test_affinity_pinned_expiry_stays_exact():
                                   hbm_ports=ports)
         assert_bit_identical(engine.run(prog, cfg),
                              run_reference(prog, cfg))
+
+
+def _homogeneous_topology(cfg: engine.EngineConfig,
+                          explicit: bool) -> hw.SoCTopology:
+    """The homogeneous expansion of a flat config, two ways: all fields
+    inherited (``SoCTopology.homogeneous``) or every Device/Link field
+    spelled out with the flat values."""
+    n = max(cfg.n_workers, 1)
+    if not explicit:
+        return hw.SoCTopology.homogeneous(n)
+    devices = tuple(
+        hw.Device(f"acc{i}", kind="accel", peak_flops=cfg.peak_flops,
+                  datapath_scale=cfg.datapath_scale,
+                  interface=cfg.interface, hbm_bw=cfg.hbm_bw,
+                  vmem_bw=cfg.vmem_bw, link="hbm")
+        for i in range(n))
+    return hw.SoCTopology(
+        devices=devices,
+        links=(hw.Link("hbm", bandwidth=cfg.hbm_bw, ports=cfg.hbm_ports),),
+        name="explicit-homog")
+
+
+@pytest.mark.parametrize("explicit", [False, True])
+@pytest.mark.parametrize("chain", [False, True])
+def test_homogeneous_topology_bit_identical_to_flat(chain, explicit):
+    """The tentpole gate: a homogeneous SoCTopology reproduces the legacy
+    flat config bit-for-bit (Timeline/Breakdown/Roofline/energy) on random
+    DAGs and chains — so it also equals the frozen PR-base reference."""
+    rng = random.Random(4321 + chain)
+    for _ in range(10):
+        prog = random_program(rng, rng.randint(1, 60), chain)
+        for cfg in CONFIGS:
+            tcfg = dataclasses.replace(
+                cfg, topology=_homogeneous_topology(cfg, explicit))
+            assert_bit_identical(engine.run(prog, tcfg),
+                                 engine.run(prog, cfg))
+            assert_bit_identical(engine.run(prog, tcfg),
+                                 run_reference(prog, cfg))
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.data())
+def test_property_homogeneous_topology_matches_flat(data):
+    n = data.draw(st.integers(min_value=1, max_value=40))
+    chain = data.draw(st.booleans())
+    seed = data.draw(st.integers(min_value=0, max_value=2**20))
+    explicit = data.draw(st.booleans())
+    prog = random_program(random.Random(seed), n, chain)
+    cfg = CONFIGS[data.draw(st.integers(min_value=0,
+                                        max_value=len(CONFIGS) - 1))]
+    tcfg = dataclasses.replace(cfg,
+                               topology=_homogeneous_topology(cfg, explicit))
+    assert_bit_identical(engine.run(prog, tcfg), engine.run(prog, cfg))
 
 
 def test_cycle_still_detected():

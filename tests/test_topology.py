@@ -1,0 +1,273 @@
+"""The heterogeneous SoC layer: per-device placement, per-link
+contention, per-device reporting — verified against closed-form
+arithmetic written with the engine's exact float expressions.
+
+The centerpiece is a hand-computed 2-device (cpu + accel) 3-op pipeline
+where every host, transfer, contention and compute term is checked with
+``==`` (no tolerance) against the same IEEE operations the engine
+performs; around it sit link-independence, placement-fallback, topology
+validation, chain-fast-path and serving co-simulation checks.
+"""
+import dataclasses
+
+import pytest
+
+from repro.sim import engine, ir
+from repro.sim.hw import Device, Link, SoCTopology
+
+NO_OVERLAP = dict(overlap_transfers=False)
+
+CPU_PEAK = 1e10
+ACC_PEAK = 1e12
+HBM_BW = 1e9
+
+SOC = SoCTopology(
+    devices=(Device("cpu0", kind="cpu", peak_flops=CPU_PEAK),
+             Device("acc0", kind="accel", peak_flops=ACC_PEAK)),
+    links=(Link("hbm", ports=1.0),),
+    name="cpu+1acc")
+
+CFG = engine.EngineConfig(interface="hbm", hbm_bw=HBM_BW,
+                          host_dispatch_s=1e-5, host_bw=1e10,
+                          host_threads=2, topology=SOC, **NO_OVERLAP)
+
+
+def _pipeline():
+    return ir.Program([
+        ir.CostedOp("pre", flops=1e8, bytes_in=1e6, bytes_out=1e6,
+                    device_class="cpu"),
+        ir.CostedOp("mm", flops=1e9, bytes_in=2e6, deps=("pre",),
+                    device_class="accel"),
+        ir.CostedOp("post", flops=1e8, bytes_out=1e6, deps=("mm",),
+                    device_class="accel"),
+    ], name="pipe")
+
+
+def test_two_device_pipeline_matches_closed_form():
+    """Every term of the cpu->accel->accel pipeline, by hand, with the
+    engine's own float expressions (division/addition order included)."""
+    res = engine.run(_pipeline(), CFG)
+
+    # host lane: dispatch + bytes/host_bw/host_threads, serialized
+    h_pre = 1e-5 + 2e6 / 1e10 / 2
+    h_mm = 1e-5 + 2e6 / 1e10 / 2
+    h_post = 1e-5 + 1e6 / 1e10 / 2
+
+    # pre on cpu0: gated by its own dispatch, transfer at factor 1
+    # (alone on the link), compute at the CPU's peak
+    x_pre = 2e6 / HBM_BW
+    c_pre = 1e8 / CPU_PEAK
+    done_pre = h_pre + x_pre + c_pre
+
+    # mm on acc0: host dispatch re-gates after pre completes, its
+    # transfer starts after pre's window ended -> factor 1 again
+    t_mm = done_pre + h_mm
+    x_mm = 2e6 / HBM_BW
+    c_mm = 1e9 / ACC_PEAK
+    done_mm = t_mm + x_mm + c_mm
+
+    t_post = done_mm + h_post
+    x_post = 1e6 / HBM_BW
+    c_post = 1e8 / ACC_PEAK
+    done_post = t_post + x_post + c_post
+
+    assert res.makespan == done_post
+
+    ev = {e.name: e for e in res.timeline.events}
+    assert ev["pre"].worker == "cpu0" and ev["pre"].duration == c_pre
+    assert ev["pre:xfer"].worker == "cpu0"
+    assert ev["pre:xfer"].start == h_pre
+    assert ev["pre:xfer"].duration == x_pre
+    assert ev["mm"].worker == "acc0" and ev["mm"].duration == c_mm
+    assert ev["mm:xfer"].start == t_mm
+    assert ev["post"].worker == "acc0" and ev["post"].duration == c_post
+    assert ev["mm:dispatch"].worker == "host"
+    assert ev["mm:dispatch"].start == done_pre
+
+    # per-device accounting
+    pd = res.per_device
+    assert pd["cpu0"] == {"transfer": x_pre, "compute": c_pre}
+    assert pd["acc0"] == {"transfer": x_mm + x_post,
+                          "compute": c_mm + c_post}
+    assert pd["host"]["host"] == h_pre + h_mm + h_post
+
+    bd = res.device_breakdowns()
+    assert bd["cpu0"].accelerator_s == c_pre
+    assert bd["cpu0"].transfer_s == x_pre
+    assert bd["acc0"].accelerator_s == c_mm + c_post
+
+    util = res.device_utilization()
+    assert util["cpu0"] == (x_pre + c_pre) / done_post
+    assert util["acc0"] == (x_mm + x_post + c_mm + c_post) / done_post
+    # utilization() counts only the accelerator devices
+    assert res.utilization() == util["acc0"]
+
+
+def test_shared_link_contention_between_devices():
+    """Two parallel ops on two accels, one 1-port link: the second
+    transfer starts while the first is live -> factor 2.  The same ops on
+    two independent 1-port links -> both at factor 1."""
+    ops = [ir.CostedOp("a", flops=2e9, bytes_in=1e6),
+           ir.CostedOp("b", flops=1e9, bytes_in=1e6)]
+    prog = ir.Program(ops)
+    x = 1e6 / HBM_BW
+    base = dict(interface="hbm", hbm_bw=HBM_BW, **NO_OVERLAP)
+
+    shared = SoCTopology(
+        devices=(Device("acc0"), Device("acc1")),
+        links=(Link("hbm", ports=1.0),), name="shared")
+    res = engine.run(prog, engine.EngineConfig(topology=shared, **base))
+    ev = {e.name: e for e in res.timeline.events}
+    # LPT pops "a" (larger compute) first -> acc0 at factor 1; "b" starts
+    # at t=0 with a's window live -> live=2, factor max(1, 2/1) = 2
+    assert ev["a:xfer"].duration == x
+    assert ev["b:xfer"].duration == x * 2.0
+    assert ev["a"].start == x and ev["b"].start == x * 2.0
+
+    split = SoCTopology(
+        devices=(Device("acc0", link="m0"), Device("acc1", link="m1")),
+        links=(Link("m0", ports=1.0), Link("m1", ports=1.0)),
+        name="split")
+    res2 = engine.run(prog, engine.EngineConfig(topology=split, **base))
+    ev2 = {e.name: e for e in res2.timeline.events}
+    assert ev2["a:xfer"].duration == x
+    assert ev2["b:xfer"].duration == x          # independent links
+    assert res2.makespan < res.makespan
+
+
+def test_device_class_fallback():
+    """A class with no matching device falls back to the accelerators;
+    with no accelerators either, any device will do."""
+    op = ir.CostedOp("k", flops=1e9, device_class="dsp")
+    res = engine.run(ir.Program([op]), CFG)
+    assert {e.worker for e in res.timeline.events
+            if e.kind == "compute"} == {"acc0"}
+
+    cpu_only = SoCTopology(devices=(Device("c0", kind="cpu"),))
+    res2 = engine.run(ir.Program([op]),
+                      engine.EngineConfig(topology=cpu_only))
+    assert {e.worker for e in res2.timeline.events} == {"c0"}
+
+
+def test_per_device_interface_and_bandwidth():
+    """Device-level interface/bandwidth overrides route that device's
+    traffic differently (acp frontend vs hbm accel)."""
+    soc = SoCTopology(
+        devices=(Device("cpu0", kind="cpu", interface="ideal"),
+                 Device("acc0", hbm_bw=2e9)),
+        links=(Link("hbm"),))
+    cfg = engine.EngineConfig(interface="hbm", hbm_bw=HBM_BW,
+                              topology=soc, **NO_OVERLAP)
+    prog = ir.Program([
+        ir.CostedOp("p", flops=1e6, bytes_in=1e6, device_class="cpu"),
+        ir.CostedOp("q", flops=1e6, bytes_in=1e6, deps=("p",))])
+    res = engine.run(prog, cfg)
+    ev = {e.name: e for e in res.timeline.events}
+    assert "p:xfer" not in ev                    # ideal: free staging
+    assert ev["q:xfer"].duration == 1e6 / 2e9    # device bw override
+
+
+def test_chain_fast_path_on_uniform_topology_matches_event_loop():
+    """An all-accel chain on a heterogeneous (cpu + 2 identical accel)
+    topology keeps the prefix-sum fast path, bit-identical to the event
+    loop; a mixed-class chain falls back to the event loop silently."""
+    soc = SoCTopology(
+        devices=(Device("cpu0", kind="cpu", peak_flops=CPU_PEAK),
+                 Device("acc0"), Device("acc1")),
+        links=(Link("hbm", ports=2.0),))
+    cfg = engine.EngineConfig(interface="hbm", topology=soc,
+                              host_dispatch_s=1e-6)
+    chain = ir.Program([
+        ir.CostedOp(f"s{i}", flops=1e9, dot_flops=1e9, bytes_in=1e6,
+                    deps=(f"s{i-1}",) if i else ())
+        for i in range(40)])
+    fast = engine.run(chain, cfg, fast=True)
+    slow = engine.run(chain, cfg, fast=False)
+    assert fast.makespan == slow.makespan
+    assert fast.timeline.events == slow.timeline.events
+    assert fast.breakdown == slow.breakdown
+    assert fast.energy == slow.energy
+
+    mixed = ir.Program([
+        ir.CostedOp("p", flops=1e8, bytes_in=1e6, device_class="cpu"),
+        ir.CostedOp("q", flops=1e9, bytes_in=1e6, deps=("p",))])
+    a = engine.run(mixed, cfg, fast=True)    # falls back internally
+    b = engine.run(mixed, cfg, fast=False)
+    assert a.makespan == b.makespan
+    assert a.timeline.events == b.timeline.events
+    assert {e.worker for e in a.timeline.events
+            if e.kind == "compute"} == {"cpu0", "acc0"}
+
+
+def test_chain_op_costs_is_device_aware():
+    """chain_op_costs charges an op at its class's reference device: the
+    cpu op at the CPU peak, the accel op at the accelerator peak."""
+    cpu_op = ir.CostedOp("p", flops=1e9, device_class="cpu")
+    acc_op = ir.CostedOp("q", flops=1e9, device_class="accel")
+    _, _, c_cpu, _ = engine.chain_op_costs(cpu_op, CFG)
+    _, _, c_acc, _ = engine.chain_op_costs(acc_op, CFG)
+    assert c_cpu == 1e9 / CPU_PEAK
+    assert c_acc == 1e9 / ACC_PEAK
+
+
+def test_serving_cosimulation_matches_on_heterogeneous_topology():
+    """busy_s == engine.makespan stays bit-exact when the serving config
+    carries a heterogeneous (cpu + 2 uniform accel) topology."""
+    from repro.configs.gemma_2b import SMOKE
+    from repro.serve.policy import ContinuousBatching
+    from repro.sim.serving import poisson_trace, simulate_serving
+
+    soc = SoCTopology(
+        devices=(Device("cpu0", kind="cpu", peak_flops=CPU_PEAK),
+                 Device("acc0"), Device("acc1")),
+        links=(Link("hbm", ports=4.0),))
+    cfg = engine.EngineConfig(interface="hbm", host_dispatch_s=1e-6,
+                              topology=soc)
+    trace = poisson_trace(12, 200.0, seed=3)
+    res = simulate_serving(SMOKE, trace, ContinuousBatching(max_batch=4),
+                           cfg)
+    assert res.busy_s == res.engine.makespan
+    assert res.makespan_s >= res.busy_s
+
+    # a mixed-signature accelerator pool would silently break that
+    # invariant (the event loop load-balances across devices with
+    # different costs) -> simulate_serving rejects it up front
+    mixed = SoCTopology(
+        devices=(Device("acc0", peak_flops=1e12),
+                 Device("acc1", peak_flops=2e12)),
+        links=(Link("hbm", ports=4.0),))
+    with pytest.raises(ValueError, match="uniform accelerator pool"):
+        simulate_serving(SMOKE, trace, ContinuousBatching(max_batch=4),
+                         dataclasses.replace(cfg, topology=mixed))
+
+
+def test_topology_validation():
+    with pytest.raises(ValueError):
+        SoCTopology(devices=())
+    with pytest.raises(ValueError):
+        SoCTopology(devices=(Device("a"), Device("a")))
+    with pytest.raises(ValueError):
+        SoCTopology(devices=(Device("a", link="nope"),),
+                    links=(Link("hbm"),))
+    bad_iface = SoCTopology(devices=(Device("a", interface="warp"),))
+    with pytest.raises(ValueError):
+        engine.run(ir.Program([ir.CostedOp("x", flops=1.0)]),
+                   engine.EngineConfig(topology=bad_iface))
+
+
+def test_sweep_layer_accepts_topology_grids():
+    from repro.sim.sweep import as_records, topology_sweep
+    prog = _pipeline()
+    topos = [SoCTopology(devices=(Device("cpu0", kind="cpu"),)
+                         + tuple(Device(f"acc{i}") for i in range(n)),
+                         links=(Link("hbm", ports=1.0),),
+                         name=f"cpu+{n}acc")
+             for n in (1, 2, 4)]
+    results = topology_sweep(prog, topos,
+                             engine.EngineConfig(interface="hbm"))
+    assert len(results) == 3
+    rows = as_records(results)
+    assert [r["topology"] for r in rows] == ["cpu+1acc", "cpu+2acc",
+                                             "cpu+4acc"]
+    assert [r["n_accel"] for r in rows] == [1, 2, 4]
+    assert rows[0]["devices"] == "1cpu+1accel"

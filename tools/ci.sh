@@ -31,4 +31,9 @@ python tools/run_doc_snippets.py README.md docs/GUIDE.md
 # recorded in BENCH_engine.json (fails the build on >2x regression)
 python -m benchmarks.bench_engine_perf --quick
 
+# SoC smoke: the heterogeneous camera-SoC sweep within 2x of its
+# BENCH_soc.json budget + the homogeneous-topology == flat-config
+# bit-identity probe
+python -m benchmarks.bench_soc --quick
+
 echo "CI OK"
