@@ -1,0 +1,197 @@
+"""Training study: pipeline-parallel schedule x microbatch x stage count.
+
+The training analogue of the serving study: one simulated execution per
+(model x schedule x n_stages x n_microbatches) cell through
+``repro.sim.training`` — gemma-2b and tinyllama split over 1..8 pipeline
+stages on a shared-link SoC, GPipe vs 1F1B, reporting step time,
+tokens/s, per-stage utilization and the measured pipeline bubble next to
+the analytic ``(p-1)/(m+p-1)`` bound.  The headline derived value is the
+1F1B-vs-GPipe step-time ratio at the deepest pipe — and it is NOT always
+>= 1 here: on a port-constrained shared link, 1F1B's steady state keeps
+forward and backward weight streams in flight simultaneously across all
+stages, roughly doubling link concurrency versus GPipe's phase-separated
+flush, so contention can invert the textbook ordering.  The uncontended
+homogeneous regime (where 1F1B provably never loses and the bubble bound
+is exact) is what the ``--quick`` probes pin down.
+
+Full mode (``python -m benchmarks.bench_training``) writes the grid and
+the CI budgets to ``BENCH_training.json`` at the repo root.
+
+``--quick`` (the ``tools/ci.sh`` gate) re-times the grid against the
+recorded budget with the 2x-regression gate and runs two correctness
+probes on homogeneous stage splits with an uncontended link: 1F1B never
+slower than GPipe (to 1 ulp), and ideal-interface measured bubble equal
+to the analytic bound.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+import time
+
+from repro.configs.gemma_2b import FULL as GEMMA_2B
+from repro.configs.tinyllama_1_1b import FULL as TINYLLAMA
+from repro.sim.engine import EngineConfig
+from repro.sim.report import row
+from repro.sim.sweep import as_training_records, training_sweep
+from repro.sim.training import bubble_bound, simulate_training
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+BENCH_JSON = ROOT / "BENCH_training.json"
+
+MODELS = (GEMMA_2B, TINYLLAMA)
+SCHEDULES = ("gpipe", "1f1b")
+STAGE_GRID = (1, 2, 4, 8)
+MB_GRID = (2, 8)
+SEQ_LEN = 512
+GLOBAL_BATCH = 8
+# datacenter chip, shared HBM link: transfers contend, dispatch costs
+CONFIG = EngineConfig(interface="hbm", hbm_ports=2, host_dispatch_s=10e-6)
+
+
+def _grid():
+    out = []
+    for model in MODELS:
+        out.extend(training_sweep(
+            model, schedules=SCHEDULES, n_stages_grid=STAGE_GRID,
+            n_microbatches_grid=MB_GRID, seq_len=SEQ_LEN,
+            global_batch=GLOBAL_BATCH, base_config=CONFIG))
+    return out
+
+
+def measure():
+    t0 = time.perf_counter()
+    results = _grid()
+    sweep_s = time.perf_counter() - t0
+    records = as_training_records(results)
+    rows = []
+    by_cell = {}
+    for res, rec in zip(results, records):
+        key = (rec["model"], res.schedule, res.n_stages, res.n_microbatches)
+        by_cell[key] = res
+        rows.append(row(
+            f"training/{rec['model']}/{res.schedule}"
+            f"/p{res.n_stages}m{res.n_microbatches}",
+            res.step_time_s,
+            f"tok_s={res.tokens_per_s:.0f} "
+            f"bubble={res.bubble_fraction:.3f} "
+            f"bound={res.bubble_bound:.3f} "
+            f"util={rec['stage_util_mean']:.2f}"))
+    p, m = max(STAGE_GRID), max(MB_GRID)
+    for model in MODELS:
+        g = by_cell[(model.name, "gpipe", p, m)]
+        o = by_cell[(model.name, "1f1b", p, m)]
+        rows.append(row(
+            f"training/{model.name}/1f1b_vs_gpipe@p{p}m{m}",
+            o.step_time_s,
+            f"speedup={g.step_time_s / o.step_time_s:.3f}x "
+            f"({o.step_time_s*1e3:.2f} vs {g.step_time_s*1e3:.2f} ms; "
+            f"<1 means shared-port contention favors the flush "
+            f"schedule)"))
+    out = {
+        "records": records,
+        "budget_s": {"training_sweep": round(sweep_s, 6)},
+        "grid": {"models": [mdl.name for mdl in MODELS],
+                 "schedules": list(SCHEDULES),
+                 "n_stages": list(STAGE_GRID),
+                 "n_microbatches": list(MB_GRID),
+                 "seq_len": SEQ_LEN, "global_batch": GLOBAL_BATCH},
+    }
+    return out, rows, results, sweep_s
+
+
+def check_probes() -> bool:
+    """The training layer's cheap correctness gate, on homogeneous stage
+    splits (layer count divisible by the stage count) with an uncontended
+    link — the regime where 1F1B provably never loses to GPipe and the
+    ideal-interface bubble equals the analytic bound exactly.  The main
+    grid deliberately does NOT satisfy either premise (uneven splits,
+    2-port link), which is what makes its records interesting."""
+    import dataclasses
+    homog = dataclasses.replace(GEMMA_2B, n_layers=16)
+    # no port contention, no serial host dispatch: both are globally
+    # ordered shared resources on which 1F1B's two-directions-in-flight
+    # steady state can genuinely lose to a flush schedule
+    cfg = EngineConfig(interface="hbm")
+    ok = True
+    for p in (2, 4, 8):
+        for m in (4, 8):
+            g = simulate_training(homog, n_stages=p, n_microbatches=m,
+                                  schedule="gpipe", seq_len=SEQ_LEN,
+                                  global_batch=GLOBAL_BATCH, config=cfg)
+            o = simulate_training(homog, n_stages=p, n_microbatches=m,
+                                  schedule="1f1b", seq_len=SEQ_LEN,
+                                  global_batch=GLOBAL_BATCH, config=cfg)
+            if o.step_time_s > g.step_time_s * (1 + 1e-12):
+                print(f"training probe FAILED: 1f1b slower than gpipe at "
+                      f"p{p}m{m}: {o.step_time_s} vs {g.step_time_s}",
+                      file=sys.stderr)
+                ok = False
+    for p, m in ((2, 8), (4, 8)):
+        for schedule in SCHEDULES:
+            r = simulate_training(
+                homog, n_stages=p, n_microbatches=m, schedule=schedule,
+                seq_len=128, global_batch=m,
+                config=EngineConfig(interface="ideal"))
+            want = bubble_bound(p, m)
+            if abs(r.bubble_fraction - want) > 1e-9:
+                print(f"training probe FAILED: ideal bubble "
+                      f"{r.bubble_fraction} != bound {want} at "
+                      f"{schedule}/p{p}m{m}", file=sys.stderr)
+                ok = False
+    return ok
+
+
+def run(emit=print):
+    """benchmarks.run driver entry: the grid rows (no file writes)."""
+    _, rows, _, _ = measure()
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="sweep timing vs the BENCH_training.json budget "
+                         "(2x gate) + the schedule/bubble probes")
+    args = ap.parse_args()
+    out, rows, _, sweep_s = measure()
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']},\"{r['derived']}\"")
+    if args.quick:
+        failed = not check_probes()
+        if not failed:
+            print("perf-smoke training: schedule/bubble probes OK")
+        if not BENCH_JSON.exists():
+            print(f"no {BENCH_JSON.name}; run without --quick to record "
+                  "budgets", file=sys.stderr)
+            sys.exit(1)
+        budgets = json.loads(BENCH_JSON.read_text()).get("budget_s", {})
+        for name, measured in out["budget_s"].items():
+            budget = budgets.get(name)
+            if budget is None:
+                continue
+            verdict = "OK" if measured <= 2.0 * budget else "REGRESSION"
+            print(f"perf-smoke {name}: {measured*1e3:.1f}ms vs budget "
+                  f"{budget*1e3:.1f}ms (2x gate) {verdict}")
+            failed |= verdict != "OK"
+        if failed:
+            print("bench_training smoke failed (perf >2x budget or "
+                  "probe broken)", file=sys.stderr)
+            sys.exit(1)
+        return
+    if not check_probes():
+        sys.exit(1)
+    out["recorded"] = time.strftime("%Y-%m-%d")
+    out["note"] = ("pipeline-parallel training sweep (model x schedule x "
+                   "n_stages x n_microbatches) through repro.sim.training; "
+                   "budget_s feeds the tools/ci.sh --quick 2x gate; "
+                   "regenerate with `PYTHONPATH=src python -m "
+                   "benchmarks.bench_training`")
+    BENCH_JSON.write_text(json.dumps(out, indent=2) + "\n")
+    print(f"wrote {BENCH_JSON}")
+
+
+if __name__ == "__main__":
+    main()

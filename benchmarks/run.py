@@ -23,6 +23,8 @@ MODULES = [
     ("soc", "SoC tuning — heterogeneous camera-SoC topology sweep"),
     ("roofline", "§Roofline — per-cell roofline terms"),
     ("serving", "serving — trace-driven batching policy x arrival rate"),
+    ("training", "training — pipeline-parallel schedule x microbatch x "
+                 "stage count"),
     ("engine_perf", "infra — executor scaling (small/medium/5k-op sweep)"),
 ]
 

@@ -4,14 +4,37 @@
 in flight: stage 0 ingests a new microbatch every tick, activations rotate
 stage->stage+1 via collective_permute, and the last stage emits a finished
 microbatch per tick once the pipeline fills (total ticks = M + S - 1).
+
+Stage partitioning is shared with the training simulator:
+``partition_stages`` (re-exported from ``repro.sim.ir``) is the single
+balanced-split rule, and ``stage_layer_slices`` turns it into the
+``[start, stop)`` layer ranges a stage owns — so the layer shares
+``repro.sim.training.simulate_training`` prices are exactly the shares
+this module would execute.
 """
 from __future__ import annotations
+
+from typing import List, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core.compat import shard_map
+from repro.sim.ir import partition_stages  # noqa: F401  (shared rule)
+
+
+def stage_layer_slices(n_layers: int, n_stages: int
+                       ) -> List[Tuple[int, int]]:
+    """``[start, stop)`` layer range per pipeline stage under the balanced
+    ``partition_stages`` split (first ``n_layers % n_stages`` stages carry
+    one extra layer)."""
+    out: List[Tuple[int, int]] = []
+    start = 0
+    for n in partition_stages(n_layers, n_stages):
+        out.append((start, start + n))
+        start += n
+    return out
 
 
 def pipeline_apply(mesh, stage_fn, stage_params, x, n_microbatches: int):

@@ -11,6 +11,12 @@ Fault-tolerance posture (DESIGN.md §4): resume from the newest committed
 checkpoint (``--resume``), async saves off the training thread, elastic
 restore onto whatever mesh this launch built (checkpoints are mesh-
 agnostic), preemption-safe atomic commits.
+
+``--dry-run`` skips the JAX path entirely and prices the SAME
+(arch x shape x microbatches) cell through the training simulator
+(``repro.sim.training``): predicted step time, tokens/s, per-stage
+utilization and pipeline bubble under GPipe and 1F1B at ``--stages``
+pipeline stages — the pre-launch sanity check for a schedule choice.
 """
 from __future__ import annotations
 
@@ -33,6 +39,34 @@ from repro.optim import adamw_init
 from repro.train import TrainConfig, make_train_step
 
 
+def dry_run(arch: str, shape_name: str, *, n_stages: int = 1,
+            n_microbatches: int = 1, schedule: str = "both",
+            smoke: bool = False, emit=print):
+    """Price the (arch x shape x microbatches) training cell through the
+    simulator instead of launching it; returns the ``TrainingResult``
+    list (one per schedule)."""
+    from repro.sim.training import SCHEDULES, simulate_training
+    cfg = get_smoke_config(arch) if smoke else get_config(arch)
+    shape = SHAPE_BY_NAME[shape_name]
+    batch, seq = (4, 64) if smoke else (shape.global_batch, shape.seq_len)
+    schedules = SCHEDULES if schedule == "both" else (schedule,)
+    out = []
+    for sched in schedules:
+        r = simulate_training(cfg, n_stages=n_stages,
+                              n_microbatches=n_microbatches,
+                              schedule=sched, seq_len=seq,
+                              global_batch=batch)
+        out.append(r)
+        utils = " ".join(f"{k}={v:.2f}"
+                         for k, v in r.per_stage_utilization.items())
+        emit(f"[dry-run] {arch}/{shape_name} {sched} p={n_stages} "
+             f"m={n_microbatches}: step={r.step_time_s*1e3:.3f}ms "
+             f"({r.tokens_per_s:.0f} tok/s) "
+             f"bubble={r.bubble_fraction:.3f} "
+             f"(bound {r.bubble_bound:.3f}) {utils}")
+    return out
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="tinyllama_1_1b")
@@ -45,7 +79,20 @@ def main():
     ap.add_argument("--ckpt-every", type=int, default=100)
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--dry-run", action="store_true",
+                    help="simulate the step instead of launching it")
+    ap.add_argument("--stages", type=int, default=1,
+                    help="pipeline stages for --dry-run")
+    ap.add_argument("--schedule", default="both",
+                    choices=("gpipe", "1f1b", "both"),
+                    help="pipeline schedule(s) for --dry-run")
     args = ap.parse_args()
+
+    if args.dry_run:
+        dry_run(args.arch, args.shape, n_stages=args.stages,
+                n_microbatches=args.microbatches, schedule=args.schedule,
+                smoke=args.smoke)
+        return
 
     shape = SHAPE_BY_NAME[args.shape]
     if args.smoke:

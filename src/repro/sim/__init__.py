@@ -15,6 +15,10 @@ Lowerings:
   ir.from_decode(ModelConfig)  token-by-token autoregressive decode chain
   ir.from_serving_step(...)    one batched serving iteration (prefill +
                                continuous-batch decode)
+  ir.from_training_step(...)   one training optimizer step (fwd, 2x-flop
+                               bwd with activation re-reads, DP gradient
+                               all-reduce, optimizer update) — whole-model
+                               or one pipeline stage's layer share
   ir.from_tasks([TileTask])    legacy scheduler tasks (compat path)
 
 ``core.simulator.roofline``/``breakdown`` and ``core.scheduler.simulate``
@@ -43,15 +47,26 @@ Served workloads go through ``repro.sim.serving``: a request trace
 (static / dynamic / continuous, from ``repro.serve.policy``), reporting
 TTFT / TPOT percentiles, throughput and batch occupancy alongside the
 engine's usual views.
+
+Training steps go through ``repro.sim.training``: microbatched
+pipeline-parallel schedules (GPipe / 1F1B) co-simulated over an
+``SoCTopology`` — each stage pinned to a device, inter-stage
+activation/gradient transfers contending on links — reporting step time,
+per-stage utilization and the measured pipeline bubble fraction against
+the analytic ``(p-1)/(m+p-1)`` bound.
 """
 from repro.sim.engine import (EngineConfig, EngineResult, Plan,  # noqa: F401
                               chain_op_costs, prepare, run)
 from repro.sim.hw import Device, Link, SoCTopology  # noqa: F401
 from repro.sim.ir import (CostedOp, Program, from_decode,  # noqa: F401
-                          from_graph, from_hlo, from_serving_step)
+                          from_graph, from_hlo, from_serving_step,
+                          from_training_step, partition_stages)
 from repro.sim.serving import (Request, ServingResult,  # noqa: F401
                                as_serving_records, bursty_trace, load_trace,
                                poisson_trace, save_trace, simulate_serving,
                                serving_sweep, trace_from_records)
-from repro.sim.sweep import (as_records, lower_graph, lower_hlo,  # noqa: F401
-                             sweep, topology_sweep)
+from repro.sim.sweep import (as_records, as_training_records,  # noqa: F401
+                             lower_graph, lower_hlo, sweep, topology_sweep,
+                             training_sweep)
+from repro.sim.training import (TrainingResult, bubble_bound,  # noqa: F401
+                                schedule_order, simulate_training)

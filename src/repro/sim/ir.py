@@ -9,24 +9,31 @@ placement tag (which kind of ``SoCTopology`` device may run it — host
 preprocessing on the CPU, NN ops on the accelerators), and a reporting
 phase.
 
-Five lowerings produce ``Program``s:
+Six lowerings produce ``Program``s:
 
-  from_graph         the declarative ``repro.core.graph.Graph`` -> tile-level
-                     ops via the dataflow tiling optimizer (replaces the old
-                     ``graph.tile_tasks`` / ``graph_ops.node_cost`` path),
-  from_hlo           an ``analyze_hlo`` cost dict -> a chain of uniform
-                     macro-ops that preserves every aggregate exactly (the
-                     compiled module is already fused; per-instruction
-                     structure is gone),
-  from_decode        a ``ModelConfig`` -> token-by-token autoregressive
-                     decode chain (weight streaming + growing KV re-reads
-                     per token),
-  from_serving_step  one continuous-batching scheduler iteration (batched
-                     prefill of newly admitted requests + one decode token
-                     for every live request) -> a <=2-op step program; the
-                     serving simulator (``repro.sim.serving``) chains these
-                     into a full served-trace Program,
-  from_tasks         legacy ``TileTask`` lists (scheduler compat).
+  from_graph          the declarative ``repro.core.graph.Graph`` -> tile-level
+                      ops via the dataflow tiling optimizer (replaces the old
+                      ``graph.tile_tasks`` / ``graph_ops.node_cost`` path),
+  from_hlo            an ``analyze_hlo`` cost dict -> a chain of uniform
+                      macro-ops that preserves every aggregate exactly (the
+                      compiled module is already fused; per-instruction
+                      structure is gone),
+  from_decode         a ``ModelConfig`` -> token-by-token autoregressive
+                      decode chain (weight streaming + growing KV re-reads
+                      per token),
+  from_serving_step   one continuous-batching scheduler iteration (batched
+                      prefill of newly admitted requests + one decode token
+                      for every live request) -> a <=2-op step program; the
+                      serving simulator (``repro.sim.serving``) chains these
+                      into a full served-trace Program,
+  from_training_step  one optimizer step (forward, backward at ~2x forward
+                      FLOPs with activation re-reads, data-parallel gradient
+                      all-reduce, optimizer update) -> a <=4-op chain, for
+                      the whole model or for one pipeline stage's layer
+                      share; the training simulator (``repro.sim.training``)
+                      replicates these per (stage, microbatch) under a
+                      GPipe / 1F1B schedule,
+  from_tasks          legacy ``TileTask`` lists (scheduler compat).
 """
 from __future__ import annotations
 
@@ -384,6 +391,154 @@ def from_serving_step(cfg, *, prefill_lens: Sequence[int] = (),
                    meta={"step": step,
                          "n_prefill": len(prefill_lens),
                          "n_decode": len(decode_positions)})
+
+
+# ---------------------------------------------------------------------------
+# lowering 2d: one training step -> fwd/bwd/reduce/update chain
+
+
+# AdamW arithmetic per parameter (two moment EMAs, bias correction, weight
+# decay, the update itself) — the constant the optimizer-update op charges
+OPTIMIZER_FLOPS_PER_PARAM = 12.0
+# backward pass = grad wrt activations + grad wrt weights: the canonical
+# 2x-forward FLOP accounting (recomputation/remat would add a third pass)
+BWD_FLOPS_MULT = 2.0
+
+
+def partition_stages(n_layers: int, n_stages: int) -> Tuple[int, ...]:
+    """Balanced layer partition for pipeline parallelism: the first
+    ``n_layers % n_stages`` stages carry one extra layer.  This is the
+    single source of truth shared by the training simulator
+    (``repro.sim.training``) and the real JAX pipeline
+    (``repro.dist.pipeline``), so simulated and executed stage shares
+    cannot drift apart."""
+    n_layers, n_stages = int(n_layers), int(n_stages)
+    if n_stages < 1:
+        raise ValueError(f"n_stages must be >= 1, got {n_stages}")
+    if n_layers < n_stages:
+        raise ValueError(
+            f"cannot split {n_layers} layers over {n_stages} stages: "
+            "every stage needs at least one layer")
+    base, extra = divmod(n_layers, n_stages)
+    return tuple(base + (1 if s < extra else 0) for s in range(n_stages))
+
+
+def _training_terms(cfg, seq_len: int, batch: int, bytes_per_param: float,
+                    bytes_per_act: float) -> Dict[str, float]:
+    """Whole-model per-step cost terms of one fwd+bwd over ``batch``
+    sequences of ``seq_len`` tokens — the shared accounting behind
+    ``from_training_step``.
+
+      fwd_flops    dense ``2 * N_active * tokens`` plus the causal
+                   attention term ``4 * n_attn * kv_dim * S*(S-1)/2`` per
+                   sequence (the ``from_serving_step`` prefill formula),
+      act_bytes    stored activations: one residual-stream tensor per
+                   layer (``n_layers * d_model * tokens * bytes_per_act``),
+                   written by the forward and re-read by the backward,
+      weight_bytes streamed active weights (charged per pass — training
+                   streams them forward AND backward),
+      grad_bytes   dense gradient traffic (active params),
+      opt_params   the full parameter count the optimizer state covers
+                   (MoE: every expert has moments, not just routed ones).
+    """
+    n_active, kv_dim, n_attn, weight_bytes = \
+        _decode_terms(cfg, bytes_per_param)
+    tokens = float(batch) * float(seq_len)
+    attn = 4.0 * n_attn * kv_dim * (seq_len * (seq_len - 1) // 2) * batch
+    return {
+        "fwd_flops": 2.0 * n_active * tokens + attn,
+        "act_bytes": float(cfg.n_layers) * float(cfg.d_model) * tokens
+        * bytes_per_act,
+        "weight_bytes": weight_bytes,
+        "grad_bytes": n_active * bytes_per_param,
+        "opt_params": float(cfg.param_count()),
+        "tokens": tokens,
+    }
+
+
+def from_training_step(cfg, *, seq_len: int = 1024, batch: int = 8,
+                       stage: Optional[int] = None, n_stages: int = 1,
+                       bytes_per_param: float = 2.0,
+                       bytes_per_act: float = 2.0,
+                       optimizer_bytes_per_param: float = 12.0,
+                       dp_degree: int = 1, name: str = "") -> Program:
+    """Lower ONE training optimizer step to a <=4-op chain Program.
+
+    The chain is ``fwd -> bwd [-> reduce] -> update``:
+
+      ``train/fwd``     forward over ``batch`` sequences: streams the
+                        (active) weights, writes the stored activations;
+      ``train/bwd``     backward at ``BWD_FLOPS_MULT`` (2x) the forward
+                        FLOPs: re-streams the weights, RE-READS the stored
+                        activations, writes the dense gradients;
+      ``train/reduce``  the data-parallel gradient all-reduce, emitted only
+                        when ``dp_degree > 1``: operand-sum metric =
+                        gradient bytes, ring wire bytes =
+                        ``2 * (d-1)/d * grad_bytes``;
+      ``train/update``  the AdamW update: ``OPTIMIZER_FLOPS_PER_PARAM``
+                        flops per (full, not active) parameter, reading the
+                        gradients + optimizer state
+                        (``optimizer_bytes_per_param`` covers fp32 m, v and
+                        master weights) and writing the state back plus the
+                        fresh streaming weights.
+
+    ``stage``/``n_stages`` select one pipeline stage's share of the model:
+    the layers partition via ``partition_stages`` and every term scales by
+    ``layers_in_stage / n_layers`` (embeddings and the attention mix are
+    apportioned uniformly — a deliberate first-order model).  ``stage=None``
+    with ``n_stages=1`` is the whole model; the training simulator
+    (``repro.sim.training``) calls this per stage and per microbatch, so a
+    1-stage 1-microbatch simulated step is THIS chain, bit for bit.
+    """
+    if n_stages > 1 and stage is None:
+        raise ValueError("stage index required when n_stages > 1; "
+                         "use repro.sim.training for the full pipeline")
+    share = 1.0
+    if stage is not None:
+        layers = partition_stages(cfg.n_layers, n_stages)
+        if not 0 <= stage < n_stages:
+            raise ValueError(f"stage {stage} out of range for "
+                             f"{n_stages} stages")
+        share = layers[stage] / float(cfg.n_layers)
+    t = _training_terms(cfg, seq_len, batch, bytes_per_param, bytes_per_act)
+    fwd_flops = t["fwd_flops"] * share
+    act_bytes = t["act_bytes"] * share
+    weight_bytes = t["weight_bytes"] * share
+    grad_bytes = t["grad_bytes"] * share
+    opt_params = t["opt_params"] * share
+    opt_state_bytes = opt_params * optimizer_bytes_per_param
+
+    ops = [
+        CostedOp(name="train/fwd", flops=fwd_flops, dot_flops=fwd_flops,
+                 bytes_in=weight_bytes, bytes_out=act_bytes,
+                 phase="fwd", device_class="accel"),
+        CostedOp(name="train/bwd",
+                 flops=BWD_FLOPS_MULT * fwd_flops,
+                 dot_flops=BWD_FLOPS_MULT * fwd_flops,
+                 bytes_in=weight_bytes + act_bytes,   # activation re-reads
+                 bytes_out=grad_bytes,
+                 deps=("train/fwd",), phase="bwd", device_class="accel"),
+    ]
+    prev = "train/bwd"
+    if dp_degree > 1:
+        ops.append(CostedOp(
+            name="train/reduce",
+            collective_bytes=grad_bytes,
+            wire_bytes=2.0 * (dp_degree - 1) / dp_degree * grad_bytes,
+            deps=(prev,), phase="reduce", device_class="accel"))
+        prev = "train/reduce"
+    ops.append(CostedOp(
+        name="train/update",
+        flops=OPTIMIZER_FLOPS_PER_PARAM * opt_params,
+        bytes_in=grad_bytes + opt_state_bytes,
+        bytes_out=opt_state_bytes + weight_bytes,
+        deps=(prev,), phase="opt", device_class="accel"))
+    return Program(ops, name=name or f"{getattr(cfg, 'name', 'model')}"
+                   f"/train", source="training",
+                   meta={"seq_len": seq_len, "batch": batch,
+                         "stage": stage, "n_stages": n_stages,
+                         "dp_degree": dp_degree, "share": share,
+                         "tokens": t["tokens"]})
 
 
 # ---------------------------------------------------------------------------

@@ -29,8 +29,8 @@ from repro.sim.engine import EngineConfig, EngineResult
 from repro.sim.hw import SoCTopology
 from repro.sim.ir import Program
 
-__all__ = ["sweep", "topology_sweep", "lower_graph", "lower_hlo",
-           "as_records"]
+__all__ = ["sweep", "topology_sweep", "training_sweep", "lower_graph",
+           "lower_hlo", "as_records", "as_training_records"]
 
 _CACHE_MAX = 64
 
@@ -168,6 +168,59 @@ def topology_sweep(program: Program, topologies: Sequence[SoCTopology],
     base = base_config if base_config is not None else EngineConfig()
     configs = [dataclasses.replace(base, topology=t) for t in topologies]
     return sweep(program, configs, **kw)
+
+
+def training_sweep(cfg, *, schedules: Sequence[str] = ("gpipe", "1f1b"),
+                   n_stages_grid: Sequence[int] = (1, 2, 4),
+                   n_microbatches_grid: Sequence[int] = (1, 4, 8),
+                   seq_len: int = 512, global_batch: Optional[int] = None,
+                   base_config: Optional[EngineConfig] = None,
+                   **kw) -> List:
+    """Run the pipeline-parallel design-space grid: one
+    ``repro.sim.training.TrainingResult`` per (n_stages, n_microbatches,
+    schedule) cell, in that nesting order.  Every cell simulates the SAME
+    amount of work — ``global_batch`` defaults to the least common
+    multiple of ``n_microbatches_grid`` so every microbatch count divides
+    it; a caller-supplied value must divide by every entry.  Extra keyword
+    arguments pass through to ``simulate_training``."""
+    import math
+
+    from repro.sim.training import simulate_training
+    base = base_config if base_config is not None else EngineConfig()
+    if global_batch is None:
+        global_batch = math.lcm(*n_microbatches_grid)
+    out = []
+    for p in n_stages_grid:
+        for m in n_microbatches_grid:
+            for schedule in schedules:
+                res = simulate_training(
+                    cfg, n_stages=p, n_microbatches=m, schedule=schedule,
+                    seq_len=seq_len, global_batch=global_batch,
+                    config=base, **kw)
+                res.meta.update({"model": getattr(cfg, "name", "model")})
+                out.append(res)
+    return out
+
+
+def as_training_records(results: Iterable) -> List[Dict[str, float]]:
+    """Flatten ``TrainingResult``s to tidy per-cell dicts (the training
+    analogue of ``as_records``)."""
+    rows = []
+    for r in results:
+        rows.append({
+            "program": r.program.name,
+            "model": r.meta.get("model", ""),
+            "schedule": r.schedule,
+            "n_stages": r.n_stages,
+            "n_microbatches": r.n_microbatches,
+            "seq_len": r.meta.get("seq_len"),
+            "global_batch": r.meta.get("global_batch"),
+            "interface": r.config.interface,
+            "bound": r.engine.roofline.bound,
+            "total_j": r.engine.energy["total_j"],
+            **r.stats(),
+        })
+    return rows
 
 
 def as_records(results: Iterable[EngineResult]) -> List[Dict[str, float]]:

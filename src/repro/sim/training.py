@@ -1,0 +1,322 @@
+"""Pipeline-parallel training simulation: schedules, stages, the engine.
+
+SMAUG's argument — end-to-end behavior is dominated by what happens
+*around* the accelerator — applies with full force to distributed
+training: the pipeline *schedule* (when each stage runs which microbatch)
+and the inter-stage activation/gradient transfers decide step time as much
+as per-stage kernel speed does.  This module opens that workload class on
+the existing event engine: a training step (``ir.from_training_step``) is
+split over ``n_stages`` pipeline stages, each stage pinned to one device
+of a PR-4 ``SoCTopology``, and the per-(stage, microbatch) forward /
+backward work items are serialized per device in the exact order of a
+classic pipeline schedule:
+
+  ``gpipe``  all M forwards, then all M backwards (the flush schedule:
+             largest bubble, simplest memory profile);
+  ``1f1b``   the Megatron one-forward-one-backward order: stage ``s``
+             warms up with ``min(S-1-s, M)`` forwards, then alternates
+             F/B in steady state, then drains the remaining backwards —
+             same bubble bound as GPipe on homogeneous stages, and never
+             slower on an *uncontended* homogeneous pipe.  On a
+             port-constrained shared link (or a congested serial host
+             lane) 1F1B keeps both pipeline directions in flight at
+             once — roughly double GPipe's concurrent demand — and can
+             genuinely lose to the flush schedule
+             (``benchmarks/bench_training.py`` records the inversion).
+
+How the co-simulation works.  The schedule is *encoded in the program*:
+every op depends on its predecessor in its device's schedule order (the
+serialization edge) in addition to its dataflow deps (``F(s,m)`` needs the
+activation transfer from stage ``s-1``; ``B(s,m)`` needs ``F(s,m)``'s
+stored activations and the gradient transfer from stage ``s+1``).  Any
+topological execution of that DAG yields the same timing, so the engine's
+event loop — with per-device placement via per-stage ``device_class``
+tags, per-link transfer contention, the host model and the ICI lane —
+prices the schedule exactly.  Inter-stage boundary tensors
+(``d_model * microbatch_tokens * bytes_per_act``) are explicit transfer
+ops placed on the *receiving* stage, so they contend on that device's
+link like any other traffic.
+
+``TrainingResult`` reports the step time, per-stage utilization, and the
+measured pipeline bubble fraction next to the analytic homogeneous bound
+``(p-1)/(m+p-1)`` (equal ideal per-microbatch cost, free transfers).  A
+1-stage 1-microbatch simulation is bit-identical to running the flat
+``ir.from_training_step`` chain through ``engine.run`` — asserted in
+``tests/test_training.py`` — and the whole layer is deterministic: same
+config, same result, bit for bit.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.sim import engine, ir
+from repro.sim.engine import EngineConfig, EngineResult
+from repro.sim.hw import Device, Link, SoCTopology
+from repro.sim.ir import CostedOp, Program, partition_stages
+
+__all__ = ["TrainingResult", "SCHEDULES", "bubble_bound",
+           "simulate_training", "schedule_order", "partition_stages"]
+
+SCHEDULES = ("gpipe", "1f1b")
+
+
+def bubble_bound(n_stages: int, n_microbatches: int) -> float:
+    """The analytic pipeline bubble fraction ``(p-1)/(m+p-1)`` for
+    homogeneous stages with equal per-microbatch cost and free
+    transfers — both GPipe and 1F1B meet it exactly in that regime."""
+    return (n_stages - 1) / float(n_microbatches + n_stages - 1)
+
+
+def schedule_order(schedule: str, stage: int, n_stages: int,
+                   n_microbatches: int) -> List[Tuple[str, int]]:
+    """The work-item order of one stage under a schedule: a list of
+    ``("F"|"B", microbatch)`` covering every microbatch exactly once in
+    each direction.  This IS the per-device serialization order the
+    simulator encodes as dependency edges."""
+    m = n_microbatches
+    if schedule == "gpipe":
+        return [("F", i) for i in range(m)] + [("B", i) for i in range(m)]
+    if schedule == "1f1b":
+        nw = min(n_stages - 1 - stage, m)
+        order = [("F", i) for i in range(nw)]
+        for i in range(m - nw):
+            order.append(("F", nw + i))
+            order.append(("B", i))
+        order.extend(("B", i) for i in range(m - nw, m))
+        return order
+    raise ValueError(f"unknown schedule {schedule!r}; one of {SCHEDULES}")
+
+
+@dataclass
+class TrainingResult:
+    """Everything one simulated training step produced.
+
+    ``engine`` is the ordinary ``EngineResult`` of the scheduled step
+    program; ``step_time_s`` is its makespan (reduce + optimizer update
+    included).  ``bubble_fraction`` is measured over the *pipeline body*
+    (first forward start to last backward end, forward/backward compute
+    only — transfers, reduce and update excluded), so on homogeneous
+    stages with an ideal interface it equals ``bubble_bound`` to float
+    precision."""
+    program: Program
+    engine: EngineResult
+    schedule: str
+    n_stages: int
+    n_microbatches: int
+    step_time_s: float
+    tokens: float
+    per_stage_busy_s: Dict[str, float]
+    per_stage_utilization: Dict[str, float]
+    bubble_fraction: float
+    bubble_bound: float
+    config: EngineConfig
+    meta: Dict = field(default_factory=dict)
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.tokens / self.step_time_s if self.step_time_s else 0.0
+
+    def stats(self) -> Dict[str, float]:
+        """Tidy scalar summary (the ``as_training_records`` row body)."""
+        utils = list(self.per_stage_utilization.values())
+        return {
+            "step_time_s": self.step_time_s,
+            "tokens_per_s": self.tokens_per_s,
+            "bubble_fraction": self.bubble_fraction,
+            "bubble_bound": self.bubble_bound,
+            "bubble_excess": self.bubble_fraction - self.bubble_bound,
+            "stage_util_mean": sum(utils) / len(utils) if utils else 0.0,
+            "stage_util_min": min(utils) if utils else 0.0,
+            "n_ops": float(len(self.program.ops)),
+        }
+
+
+def _stage_topology(config: EngineConfig, n_stages: int
+                    ) -> Tuple[SoCTopology, Tuple[str, ...]]:
+    """(topology with per-stage placement kinds, stage device names).
+
+    ``config.topology`` set: its accelerator-class devices, in declaration
+    order, become the stages (kinds rewritten to ``stage<s>``; per-device
+    overrides — a slower stage, a different link — are preserved, which is
+    exactly how heterogeneous-stage studies are set up).  A topology with
+    NO accelerator-class devices follows the engine's placement-fallback
+    convention (class -> accel -> any): every device is stage-capable, so
+    training on an all-cpu/dsp SoC runs on those devices at their own
+    cost parameters.  Unset: the homogeneous expansion — ``n_stages``
+    identical stage devices on one shared link inheriting every flat
+    field.
+    """
+    if config.topology is not None:
+        topo = config.topology
+        accel = [i for i, d in enumerate(topo.devices) if d.kind == "accel"]
+        if not accel:
+            accel = list(range(len(topo.devices)))
+        if len(accel) < n_stages:
+            raise ValueError(
+                f"topology {topo.name!r} has {len(accel)} stage-capable "
+                f"devices but the schedule needs {n_stages}")
+        chosen = accel[:n_stages]
+        devices = list(topo.devices)
+        names = []
+        for s, i in enumerate(chosen):
+            devices[i] = dataclasses.replace(devices[i], kind=f"stage{s}")
+            names.append(devices[i].name)
+        return (SoCTopology(devices=tuple(devices), links=topo.links,
+                            name=topo.name), tuple(names))
+    devices = tuple(Device(f"stage{s}", kind=f"stage{s}")
+                    for s in range(n_stages))
+    return (SoCTopology(devices=devices, links=(Link("hbm"),),
+                        name=f"{n_stages}stage"),
+            tuple(d.name for d in devices))
+
+
+def simulate_training(cfg, *, n_stages: int = 1, n_microbatches: int = 1,
+                      schedule: str = "1f1b", seq_len: int = 512,
+                      global_batch: int = 8,
+                      config: Optional[EngineConfig] = None,
+                      bytes_per_param: float = 2.0,
+                      bytes_per_act: float = 2.0,
+                      dp_degree: int = 1,
+                      name: str = "") -> TrainingResult:
+    """Simulate one pipeline-parallel training step; see the module header.
+
+    ``cfg`` is a ``repro.core.config.ModelConfig``; ``config`` defaults to
+    a fresh flat ``EngineConfig()`` (``None`` sentinel).
+    ``n_microbatches`` must divide ``global_batch`` evenly (every
+    microbatch carries the same sequences).  With ``n_stages == 1``
+    and no topology the program runs on the flat config unchanged, so the
+    single-stage single-microbatch case is the plain
+    ``ir.from_training_step`` chain.
+    """
+    if config is None:
+        config = EngineConfig()
+    if schedule not in SCHEDULES:
+        raise ValueError(f"unknown schedule {schedule!r}; "
+                         f"one of {SCHEDULES}")
+    n_stages = int(n_stages)
+    n_microbatches = int(n_microbatches)
+    if n_microbatches < 1:
+        raise ValueError(f"n_microbatches must be >= 1, "
+                         f"got {n_microbatches}")
+    if global_batch % n_microbatches:
+        raise ValueError(
+            f"global_batch {global_batch} is not divisible by "
+            f"n_microbatches {n_microbatches}")
+    mb_batch = global_batch // n_microbatches
+
+    pinned = n_stages > 1 or config.topology is not None
+    if pinned:
+        topo, stage_devs = _stage_topology(config, n_stages)
+        run_config = dataclasses.replace(config, topology=topo)
+    else:
+        topo, stage_devs = None, ("",)
+        run_config = config
+
+    # per-stage cost templates: ir.from_training_step is the single source
+    # of cost truth (fwd/bwd per microbatch; reduce/update once per stage)
+    templates = [ir.from_training_step(
+        cfg, seq_len=seq_len, batch=mb_batch,
+        stage=(s if n_stages > 1 else None), n_stages=n_stages,
+        bytes_per_param=bytes_per_param, bytes_per_act=bytes_per_act,
+        dp_degree=dp_degree) for s in range(n_stages)]
+    by_name = [{op.name: op for op in t.ops} for t in templates]
+    # one residual-stream tensor crosses each stage boundary per microbatch
+    boundary_bytes = (float(cfg.d_model) * mb_batch * seq_len
+                      * bytes_per_act)
+
+    def cls(s: int) -> str:
+        return f"stage{s}" if pinned else "accel"
+
+    ops: List[CostedOp] = []
+    for s in range(n_stages):
+        prev: Optional[str] = None      # serialization edge on this device
+
+        def emit(op: CostedOp) -> None:
+            nonlocal prev
+            deps = tuple(op.deps)
+            if prev is not None and prev not in deps:
+                deps = (prev,) + deps
+            ops.append(ir.replace(op, deps=deps))
+            prev = op.name
+
+        for kind, m in schedule_order(schedule, s, n_stages,
+                                      n_microbatches):
+            if kind == "F":
+                if s > 0:               # activation arrives from stage s-1
+                    emit(CostedOp(name=f"xF/s{s}/m{m}",
+                                  bytes_in=boundary_bytes,
+                                  deps=(f"F/s{s-1}/m{m}",),
+                                  phase=f"s{s}", device_class=cls(s)))
+                emit(ir.replace(by_name[s]["train/fwd"],
+                                name=f"F/s{s}/m{m}", deps=(),
+                                phase=f"s{s}", device_class=cls(s)))
+            else:
+                if s < n_stages - 1:    # gradient arrives from stage s+1
+                    emit(CostedOp(name=f"xB/s{s}/m{m}",
+                                  bytes_in=boundary_bytes,
+                                  deps=(f"B/s{s+1}/m{m}",),
+                                  phase=f"s{s}", device_class=cls(s)))
+                emit(ir.replace(by_name[s]["train/bwd"],
+                                name=f"B/s{s}/m{m}",
+                                deps=(f"F/s{s}/m{m}",),
+                                phase=f"s{s}", device_class=cls(s)))
+        if "train/reduce" in by_name[s]:
+            emit(ir.replace(by_name[s]["train/reduce"],
+                            name=f"R/s{s}", deps=(),
+                            phase=f"s{s}", device_class=cls(s)))
+        emit(ir.replace(by_name[s]["train/update"],
+                        name=f"U/s{s}", deps=(),
+                        phase=f"s{s}", device_class=cls(s)))
+
+    tokens = float(global_batch) * float(seq_len)
+    program = Program(
+        ops, name=name or f"{getattr(cfg, 'name', 'model')}/train-"
+        f"{schedule}-p{n_stages}m{n_microbatches}", source="training",
+        meta={"schedule": schedule, "n_stages": n_stages,
+              "n_microbatches": n_microbatches, "seq_len": seq_len,
+              "global_batch": global_batch, "dp_degree": dp_degree,
+              "tokens": tokens})
+    res = engine.run(program, run_config)
+
+    # measured bubble: pipeline body only (first F start -> last B end),
+    # forward/backward compute time only — the quantity the analytic
+    # (p-1)/(m+p-1) bound describes
+    t0 = t1 = None
+    busy = 0.0
+    for e in res.timeline.events:
+        if e.kind != "compute":
+            continue
+        if e.name.startswith("F/"):
+            t0 = e.start if t0 is None or e.start < t0 else t0
+            busy += e.duration
+        elif e.name.startswith("B/"):
+            end = e.start + e.duration
+            t1 = end if t1 is None or end > t1 else t1
+            busy += e.duration
+    span = (t1 - t0) if (t0 is not None and t1 is not None) else 0.0
+    bubble = (1.0 - busy / (n_stages * span)) if span > 0.0 else 0.0
+
+    util = res.device_utilization()
+    if pinned:
+        stage_util = {d: util.get(d, 0.0) for d in stage_devs}
+    else:
+        stage_util = util
+    busy_by_dev: Dict[str, float] = {}
+    for e in res.timeline.events:
+        if e.kind != "idle" and e.worker in util:
+            busy_by_dev[e.worker] = busy_by_dev.get(e.worker, 0.0) \
+                + e.duration
+
+    return TrainingResult(
+        program=program, engine=res, schedule=schedule, n_stages=n_stages,
+        n_microbatches=n_microbatches, step_time_s=res.makespan,
+        tokens=tokens, per_stage_busy_s=busy_by_dev,
+        per_stage_utilization=stage_util,
+        bubble_fraction=bubble,
+        bubble_bound=bubble_bound(n_stages, n_microbatches),
+        config=run_config,
+        meta={"seq_len": seq_len, "global_batch": global_batch,
+              "bytes_per_param": bytes_per_param,
+              "bytes_per_act": bytes_per_act, "dp_degree": dp_degree})

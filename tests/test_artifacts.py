@@ -1,6 +1,12 @@
 """Guards over the committed experiment artifacts: the dry-run table is
-complete and the recorded §Perf iterations actually improved their cells."""
+complete, the recorded §Perf iterations actually improved their cells,
+and the BENCH_*.json benchmark grids at the repo root keep their golden
+schema — required keys, finite positive timings, and the derived claims
+(speedups >= 1, continuous >= static at saturation, 1F1B-vs-GPipe and
+bubble-vs-bound relations) — so a benchmark refactor cannot silently
+ship a malformed artifact."""
 import json
+import math
 from pathlib import Path
 
 import pytest
@@ -8,6 +14,14 @@ import pytest
 DRYRUN = Path("experiments/dryrun/results.json")
 PERF = Path("experiments/perf_iters.json")
 ROOFLINE = Path("experiments/roofline_single_pod.json")
+BENCH_ENGINE = Path("BENCH_engine.json")
+BENCH_SERVING = Path("BENCH_serving.json")
+BENCH_SOC = Path("BENCH_soc.json")
+BENCH_TRAINING = Path("BENCH_training.json")
+
+
+def _finite_pos(x) -> bool:
+    return isinstance(x, (int, float)) and math.isfinite(x) and x > 0.0
 
 
 @pytest.mark.skipif(not DRYRUN.exists(), reason="sweep not present")
@@ -35,6 +49,117 @@ def test_roofline_table_covers_40_cells():
     for r in ok:
         assert r["bound"] in ("compute", "memory", "collective")
         assert r["compute_s"] > 0 and r["memory_s"] > 0
+
+
+# ---------------------------------------------------------------------------
+# golden schemas of the BENCH_*.json grids (repo root)
+
+
+@pytest.mark.skipif(not BENCH_ENGINE.exists(), reason="bench not present")
+def test_bench_engine_schema():
+    b = json.loads(BENCH_ENGINE.read_text())
+    assert set(b) >= {"cases", "budget_s", "sweep_8cfg_decode_5k",
+                      "recorded", "note"}
+    assert b["cases"], "no recorded cases"
+    for name, case in b["cases"].items():
+        assert case["n_ops"] > 0, name
+        assert _finite_pos(case["engine_s"]), name
+        assert _finite_pos(case["reference_s"]), name
+        # the engine must never have regressed below the frozen PR base
+        assert case["speedup"] >= 1.0, name
+        # the recorded column is derived from the (rounded) timings
+        assert case["speedup"] == pytest.approx(
+            case["reference_s"] / case["engine_s"], rel=0.05), name
+    assert all(_finite_pos(v) for v in b["budget_s"].values())
+    # the sweep case scales at least as well as serial execution
+    sw = b["sweep_8cfg_decode_5k"]
+    assert _finite_pos(sw["sweep_s"]) and sw["speedup"] >= 1.0
+
+
+@pytest.mark.skipif(not BENCH_SERVING.exists(), reason="bench not present")
+def test_bench_serving_schema():
+    b = json.loads(BENCH_SERVING.read_text())
+    assert set(b) >= {"model", "n_requests", "config", "grid", "recorded"}
+    grid = b["grid"]
+    assert grid, "empty serving grid"
+    required = {"policy", "rate_rps", "makespan_s", "busy_s",
+                "engine_makespan_s", "throughput_tok_s", "occupancy",
+                "ttft_p50", "ttft_p99", "tpot_p50", "latency_p99",
+                "total_j"}
+    by_cell = {}
+    for rec in grid:
+        assert required <= set(rec), rec.get("policy")
+        assert _finite_pos(rec["makespan_s"])
+        assert _finite_pos(rec["throughput_tok_s"])
+        assert all(math.isfinite(rec[k]) and rec[k] >= 0.0
+                   for k in required - {"policy"})
+        # the co-simulation invariant survives serialization
+        assert rec["busy_s"] == rec["engine_makespan_s"]
+        assert rec["makespan_s"] >= rec["busy_s"]
+        assert 0.0 <= rec["occupancy"] <= 1.0
+        by_cell[(rec["policy"], rec["rate_rps"])] = rec
+    # the recorded headline claim: continuous beats static at the
+    # saturating (highest) arrival rate
+    rates = sorted({r["rate_rps"] for r in grid})
+    top = rates[-1]
+    assert by_cell[("continuous", top)]["throughput_tok_s"] > \
+        by_cell[("static", top)]["throughput_tok_s"]
+    # the monotone speedup column: continuous batching's gain over static
+    # grows with offered load (that is WHY it exists; dynamic is allowed
+    # to sag at saturation — max-wait queueing is a real effect)
+    gains = [by_cell[("continuous", rate)]["throughput_tok_s"]
+             / by_cell[("static", rate)]["throughput_tok_s"]
+             for rate in rates]
+    assert gains == sorted(gains), gains
+
+
+@pytest.mark.skipif(not BENCH_SOC.exists(), reason="bench not present")
+def test_bench_soc_schema():
+    b = json.loads(BENCH_SOC.read_text())
+    assert set(b) >= {"records", "budget_s", "grid", "recorded"}
+    g = b["grid"]
+    want = len(g["frontends"]) * len(g["n_accels"]) * len(g["link_ports"])
+    assert len(b["records"]) == want, "incomplete SoC grid"
+    for rec in b["records"]:
+        assert _finite_pos(rec["makespan_s"]), rec["topology"]
+        assert _finite_pos(rec["total_j"]), rec["topology"]
+        assert 0.0 <= rec["frontend_util"] <= 1.0
+        assert 0.0 <= rec["accel_util_mean"] <= 1.0
+        assert rec["bound"] in ("compute", "memory", "collective")
+        assert rec["n_accels"] in g["n_accels"]
+    assert all(_finite_pos(v) for v in b["budget_s"].values())
+
+
+@pytest.mark.skipif(not BENCH_TRAINING.exists(), reason="bench not present")
+def test_bench_training_schema():
+    b = json.loads(BENCH_TRAINING.read_text())
+    assert set(b) >= {"records", "budget_s", "grid", "recorded"}
+    g = b["grid"]
+    want = (len(g["models"]) * len(g["schedules"]) * len(g["n_stages"])
+            * len(g["n_microbatches"]))
+    assert len(b["records"]) == want, "incomplete training grid"
+    by_cell = {}
+    for rec in b["records"]:
+        key = (rec["model"], rec["schedule"], rec["n_stages"],
+               rec["n_microbatches"])
+        by_cell[key] = rec
+        assert _finite_pos(rec["step_time_s"]), key
+        assert _finite_pos(rec["tokens_per_s"]), key
+        assert 0.0 <= rec["bubble_fraction"] < 1.0, key
+        assert rec["bubble_bound"] == pytest.approx(
+            (rec["n_stages"] - 1)
+            / (rec["n_microbatches"] + rec["n_stages"] - 1)), key
+        assert 0.0 < rec["stage_util_mean"] <= 1.0, key
+    for (model, schedule, p, m), rec in by_cell.items():
+        # a single stage has no pipeline bubble, deeper pipes have more
+        if p == 1:
+            assert rec["bubble_fraction"] < 0.05, (model, schedule)
+        # the analytic bound is monotone in m at fixed p — and the
+        # recorded bound column must follow it
+        if m > min(g["n_microbatches"]):
+            prev = by_cell[(model, schedule, p, min(g["n_microbatches"]))]
+            assert rec["bubble_bound"] <= prev["bubble_bound"]
+    assert all(_finite_pos(v) for v in b["budget_s"].values())
 
 
 @pytest.mark.skipif(not PERF.exists(), reason="perf log not present")

@@ -265,6 +265,53 @@ def test_duplicate_rids_rejected():
                          StaticBatching(max_batch=2))
 
 
+# ---------------------------------------------------------------------------
+# hypothesis properties (skipped automatically when hypothesis is absent)
+
+
+from _hyp import given, settings, st  # noqa: E402
+
+
+@settings(max_examples=40, deadline=None)
+@given(n=st.integers(1, 48), rate=st.floats(0.5, 500.0),
+       seed=st.integers(0, 2**16), kind=st.sampled_from(["poisson",
+                                                         "bursty"]))
+def test_trace_generator_properties(n, rate, seed, kind):
+    """Arrivals are sorted and non-negative, lengths are >= 1, and the
+    generators are pure functions of their arguments — for ANY
+    (n, rate, seed)."""
+    gen = poisson_trace if kind == "poisson" else bursty_trace
+    trace = gen(n, rate, seed=seed)
+    assert len(trace) == n
+    assert all(r.arrival_s >= 0.0 for r in trace)
+    assert all(x.arrival_s <= y.arrival_s for x, y in zip(trace, trace[1:]))
+    assert all(r.prompt_len >= 1 and r.output_len >= 1 for r in trace)
+    assert [r.rid for r in trace] == list(range(n))
+    assert trace == gen(n, rate, seed=seed)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 32), rate=st.floats(1.0, 300.0),
+       seed=st.integers(0, 2**16))
+def test_trace_round_trip_property(n, rate, seed):
+    """save_trace -> load_trace is the identity, bit for bit, through
+    BOTH record formats (JSON-lines and a JSON array): float fields
+    survive exactly (json emits repr, repr round-trips IEEE doubles)."""
+    import json
+    import tempfile
+    trace = poisson_trace(n, rate, seed=seed)
+    with tempfile.TemporaryDirectory() as d:
+        p = f"{d}/trace.jsonl"
+        save_trace(p, trace)
+        assert load_trace(p) == trace              # JSONL, bit-identical
+        q = f"{d}/trace.json"
+        with open(p) as f:
+            records = [json.loads(ln) for ln in f]
+        with open(q, "w") as f:
+            json.dump(records, f)
+        assert load_trace(q) == trace              # JSON array, same bits
+
+
 def test_get_policy_registry():
     assert get_policy("dynamic", max_batch=16, max_wait_s=0.5).max_wait_s \
         == 0.5

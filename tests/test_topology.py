@@ -241,6 +241,84 @@ def test_serving_cosimulation_matches_on_heterogeneous_topology():
                          dataclasses.replace(cfg, topology=mixed))
 
 
+def test_uniform_class_params_detects_mixed_pools():
+    """The precondition the serving co-simulation relies on: a pool is
+    uniform only when every candidate device of the class shares one cost
+    signature AND one link."""
+    uniform = SoCTopology(
+        devices=(Device("acc0", peak_flops=2e12),
+                 Device("acc1", peak_flops=2e12)),
+        links=(Link("hbm", ports=2.0),))
+    assert engine.uniform_class_params(
+        engine.EngineConfig(topology=uniform), "accel")
+    # flat configs are trivially uniform
+    assert engine.uniform_class_params(engine.EngineConfig(n_workers=8),
+                                       "accel")
+    # mixed peak flops -> two signatures
+    mixed_peak = SoCTopology(
+        devices=(Device("acc0", peak_flops=1e12),
+                 Device("acc1", peak_flops=2e12)))
+    assert not engine.uniform_class_params(
+        engine.EngineConfig(topology=mixed_peak), "accel")
+    # identical devices on DIFFERENT links are also non-uniform: the
+    # same op would contend on different port pools per placement
+    split_links = SoCTopology(
+        devices=(Device("acc0", link="m0"), Device("acc1", link="m1")),
+        links=(Link("m0", ports=1.0), Link("m1", ports=1.0)))
+    assert not engine.uniform_class_params(
+        engine.EngineConfig(topology=split_links), "accel")
+    # mixed interface override -> non-uniform
+    mixed_iface = SoCTopology(
+        devices=(Device("acc0", interface="acp"), Device("acc1")))
+    assert not engine.uniform_class_params(
+        engine.EngineConfig(interface="hbm", topology=mixed_iface),
+        "accel")
+
+
+def test_mixed_pool_serving_error_is_actionable():
+    """The clear-error path: a mixed accelerator pool is rejected up
+    front with a message that names the problem and the fix surface,
+    instead of silently breaking the busy_s == makespan invariant."""
+    from repro.configs.gemma_2b import SMOKE
+    from repro.serve.policy import ContinuousBatching
+    from repro.sim.serving import poisson_trace, simulate_serving
+
+    mixed = SoCTopology(
+        devices=(Device("acc0", hbm_bw=1e9), Device("acc1", hbm_bw=2e9)))
+    with pytest.raises(ValueError) as ei:
+        simulate_serving(SMOKE, poisson_trace(4, 100.0, seed=0),
+                         ContinuousBatching(max_batch=2),
+                         engine.EngineConfig(topology=mixed))
+    msg = str(ei.value)
+    assert "uniform accelerator pool" in msg
+    assert "cost signature" in msg and "chain_op_costs" in msg
+
+
+def test_uniform_override_pool_serving_busy_equals_makespan_bitwise():
+    """A pool that overrides device parameters UNIFORMLY (every accel at
+    the same non-default peak/bandwidth, one shared link) still satisfies
+    busy_s == engine.makespan bit for bit — the chain_op_costs pricing
+    path equals the engine's charge on every op."""
+    from repro.configs.gemma_2b import SMOKE
+    from repro.serve.policy import get_policy
+    from repro.sim.serving import poisson_trace, simulate_serving
+
+    soc = SoCTopology(
+        devices=(Device("cpu0", kind="cpu", peak_flops=CPU_PEAK),
+                 Device("acc0", peak_flops=2e12, hbm_bw=2e9),
+                 Device("acc1", peak_flops=2e12, hbm_bw=2e9)),
+        links=(Link("hbm", ports=2.0),))
+    cfg = engine.EngineConfig(interface="hbm", hbm_bw=HBM_BW,
+                              host_dispatch_s=1e-6, topology=soc)
+    assert engine.uniform_class_params(cfg, "accel")
+    trace = poisson_trace(10, 150.0, seed=11)
+    for kind in ("static", "dynamic", "continuous"):
+        res = simulate_serving(SMOKE, trace, get_policy(kind, max_batch=4),
+                               cfg)
+        assert res.busy_s == res.engine.makespan
+        assert res.makespan_s >= res.busy_s
+
+
 def test_topology_validation():
     with pytest.raises(ValueError):
         SoCTopology(devices=())

@@ -8,12 +8,23 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+# coverage floor over the simulation core: new repro.sim modules cannot
+# land untested.  Gated on pytest-cov being importable (the container may
+# not ship it; the floor is enforced wherever it is).
+COV_ARGS=""
+if python -c "import pytest_cov" >/dev/null 2>&1; then
+  COV_ARGS="--cov=repro.sim --cov-fail-under=85"
+else
+  echo "ci: pytest-cov unavailable; coverage floor (repro.sim >= 85%) skipped"
+fi
+
 if [[ "${1:-}" == "--fast" ]]; then
   python -m pytest -q -m "not slow" \
     tests/test_sim_engine.py tests/test_scheduler.py tests/test_dist.py \
     tests/test_sharding.py
 else
-  python -m pytest -q -m "not slow"
+  # shellcheck disable=SC2086  # COV_ARGS is deliberately word-split
+  python -m pytest -q -m "not slow" $COV_ARGS
 fi
 
 # smoke the engine-driven case studies (multiacc exercises from_graph +
@@ -35,5 +46,10 @@ python -m benchmarks.bench_engine_perf --quick
 # BENCH_soc.json budget + the homogeneous-topology == flat-config
 # bit-identity probe
 python -m benchmarks.bench_soc --quick
+
+# training smoke: the pipeline-parallel sweep within 2x of its
+# BENCH_training.json budget + the schedule probes (1F1B never loses to
+# GPipe on homogeneous uncontended stages; ideal bubble == (p-1)/(m+p-1))
+python -m benchmarks.bench_training --quick
 
 echo "CI OK"
