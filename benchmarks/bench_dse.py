@@ -1,0 +1,231 @@
+"""DSE benchmark: the vectorized analytic cost model vs the exact engine.
+
+Three studies, all feeding ``BENCH_dse.json`` at the repo root:
+
+* **speedup** — a 1024-point hardware grid (peak_flops x hbm_bw x
+  hbm_ports x host_dispatch_s) over the 5120-op gemma-2b decode chain,
+  priced by ``sweep.batched`` (one vectorized parameter matrix, exact on
+  chains, top-k exact-verified) against ``sweep(executor="process")``
+  running the event engine per point.  Full mode times both sides and
+  records ``speedup_vs_process`` (acceptance: >= 50x).
+* **dag_fidelity** — the analytic lower/upper bracket on a vgg16 tile
+  DAG across 32 configs: the bracket must hold point-for-point, and the
+  mean/max lower-bound error is recorded.
+* **port_study** — the Fig-13 shared-port question re-answered by
+  ``sweep.optimize`` (``benchmarks.bench_soc.port_study_optimize``):
+  gradient descent over a continuous port range must land within 2% of
+  the exact grid-best makespan.
+
+``--quick`` (the ``tools/ci.sh`` perf smoke) re-times only the analytic
+side against the recorded budget (2x gate) and re-checks the recorded
+speedup floor, the DAG bracket, and the port-study gap — the minutes-long
+process-pool sweep runs only in full mode.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import itertools
+import json
+import pathlib
+import sys
+import time
+
+import numpy as np
+
+from repro.configs.gemma_2b import FULL as GEMMA_2B
+from repro.configs.paper_nets import PAPER_NETS
+from repro.sim import engine, ir
+from repro.sim.report import row
+from repro.sim.sweep import batched, lower_graph, sweep
+from benchmarks.common import build_paper_graph
+from benchmarks.bench_soc import port_study_optimize
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+BENCH_JSON = ROOT / "BENCH_dse.json"
+
+SPEEDUP_FLOOR = 50.0          # batched vs process-pool sweep (acceptance)
+PORT_STUDY_TOL = 0.02         # optimize vs exact grid best (acceptance)
+
+GRID_BASE = engine.EngineConfig(interface="hbm", n_workers=1)
+
+
+def _decode():
+    return ir.from_decode(GEMMA_2B, n_tokens=640, ops_per_token=8)
+
+
+def _grid_1024():
+    """8 x 8 x 4 x 4 = 1024 design points around the datacenter chip."""
+    peaks = np.geomspace(2e13, 4e14, 8)
+    bws = np.geomspace(2e11, 1.6e12, 8)
+    ports = (0.5, 1.0, 2.0, 4.0)
+    hds = (0.0, 5e-7, 1e-6, 2e-6)
+    return [dataclasses.replace(GRID_BASE, peak_flops=float(p),
+                                hbm_bw=float(b), hbm_ports=float(k),
+                                host_dispatch_s=float(h))
+            for p, b, k, h in itertools.product(peaks, bws, ports, hds)]
+
+
+def _dag_fidelity():
+    """Bracket quality of the analytic bounds on a real tile DAG."""
+    g = build_paper_graph(PAPER_NETS["vgg16"], batch=1)
+    dag = lower_graph(g, batch=1, max_tile_elems=2048)
+    rng = np.random.default_rng(7)
+    lower, upper, exact, n_cfgs = [], [], [], 0
+    # batched() prices one interface (one set of statics) per call —
+    # split the mixed grid per interface, n_workers per sub-batch
+    for iface in ("hbm", "dma", "acp", "ideal"):
+        for nw in (1, 4):
+            cfgs = [engine.EngineConfig(
+                interface=iface, n_workers=nw,
+                peak_flops=float(rng.uniform(2e13, 4e14)),
+                hbm_bw=float(rng.uniform(2e11, 1.6e12)),
+                hbm_ports=float(rng.choice((0.5, 1.0, 2.0, 4.0))),
+                host_dispatch_s=float(rng.choice((0.0, 1e-6))))
+                for _ in range(4)]
+            bs = batched(dag, cfgs, top_k=0)
+            lower.extend(bs.lower)
+            upper.extend(bs.upper)
+            exact.extend(r.makespan for r in sweep(dag, cfgs))
+            n_cfgs += len(cfgs)
+    lower, upper = np.asarray(lower), np.asarray(upper)
+    exact = np.asarray(exact)
+    holds = bool(np.all(lower <= exact * (1 + 1e-12))
+                 and np.all(exact <= upper * (1 + 1e-12)))
+    lb_err = 1.0 - lower / exact
+    return {"program": dag.name, "n_ops": len(dag.ops),
+            "n_configs": n_cfgs, "bracket_holds": holds,
+            "lb_err_mean": round(float(lb_err.mean()), 4),
+            "lb_err_max": round(float(lb_err.max()), 4),
+            "ub_over_exact_mean": round(float((upper / exact).mean()), 3)}
+
+
+def measure(full: bool):
+    out = {"budget_s": {}}
+    rows = []
+
+    decode = _decode()
+    cfgs = _grid_1024()
+    batched(decode, cfgs[:4], top_k=0)                   # warm
+    t0 = time.perf_counter()
+    bs = batched(decode, cfgs, top_k=3)
+    t_batched = time.perf_counter() - t0
+    sp = {"n_ops": len(decode.ops), "n_configs": len(cfgs),
+          "backend": bs.backend, "top_k": 3,
+          "batched_s": round(t_batched, 6),
+          "per_point_us": round(t_batched / len(cfgs) * 1e6, 2),
+          "max_verified_relaxation_err": max(
+              abs(v["relaxation_err"]) for v in bs.verified)}
+    if full:
+        t0 = time.perf_counter()
+        exact = sweep(decode, cfgs, executor="process")
+        t_proc = time.perf_counter() - t0
+        best = bs.verified[0]
+        exact_best = min(r.makespan for r in exact)
+        sp["process_s"] = round(t_proc, 3)
+        sp["speedup_vs_process"] = round(t_proc / t_batched, 1)
+        sp["best_matches_exact"] = bool(best["exact_s"] == exact_best)
+    out["speedup"] = sp
+    out["budget_s"]["batched_1024x5k_decode"] = round(t_batched, 6)
+    rows.append(row(
+        "dse/batched_1024x5k_decode", t_batched,
+        f"n_ops={sp['n_ops']} n_configs={sp['n_configs']} "
+        f"per_point_us={sp['per_point_us']} "
+        + (f"speedup_vs_process={sp['speedup_vs_process']}x" if full
+           else "quick")))
+
+    fid = _dag_fidelity()
+    out["dag_fidelity"] = fid
+    rows.append(row(
+        "dse/dag_bracket_vgg16", 0.0,
+        f"n_configs={fid['n_configs']} holds={fid['bracket_holds']} "
+        f"lb_err_mean={fid['lb_err_mean']} lb_err_max={fid['lb_err_max']}"))
+
+    t0 = time.perf_counter()
+    ps = port_study_optimize()
+    t_opt = time.perf_counter() - t0
+    out["port_study"] = ps
+    out["budget_s"]["optimize_port_study"] = round(t_opt, 6)
+    rows.append(row(
+        "dse/optimize_port_study", t_opt,
+        f"opt_ports={ps['opt_ports']} grid_best_ports={ps['grid_best_ports']} "
+        f"within_frac={ps['within_frac']} knee_ports={ps['knee_ports']}"))
+    return out, rows
+
+
+def _check(out, recorded=None):
+    """The correctness gates (quick mode checks the recorded speedup)."""
+    failed = False
+    if not out["dag_fidelity"]["bracket_holds"]:
+        print("DSE smoke: DAG lower/upper bracket violated", file=sys.stderr)
+        failed = True
+    err = out["speedup"]["max_verified_relaxation_err"]
+    if not (np.isfinite(err) and err == 0.0):
+        print(f"DSE smoke: chain relaxation_err {err} != 0", file=sys.stderr)
+        failed = True
+    if abs(out["port_study"]["within_frac"]) > PORT_STUDY_TOL:
+        print(f"DSE smoke: optimize landed "
+              f"{out['port_study']['within_frac']:+.2%} off the grid best "
+              f"(tol {PORT_STUDY_TOL:.0%})", file=sys.stderr)
+        failed = True
+    speedup = (out["speedup"].get("speedup_vs_process")
+               or (recorded or {}).get("speedup", {}).get(
+                   "speedup_vs_process"))
+    if speedup is None or speedup < SPEEDUP_FLOOR:
+        print(f"DSE smoke: batched speedup {speedup} below the "
+              f"{SPEEDUP_FLOOR:.0f}x floor", file=sys.stderr)
+        failed = True
+    return failed
+
+
+def run(emit=print):
+    """benchmarks.run driver entry: analytic-side rows only (no process
+    sweep, no file writes)."""
+    _, rows = measure(full=False)
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="analytic-side timing vs the BENCH_dse.json "
+                         "budget (2x gate) + bracket/speedup/port-study "
+                         "checks (CI perf smoke)")
+    args = ap.parse_args()
+    out, rows = measure(full=not args.quick)
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']},\"{r['derived']}\"")
+    if args.quick:
+        if not BENCH_JSON.exists():
+            print(f"no {BENCH_JSON.name}; run without --quick to record "
+                  "budgets", file=sys.stderr)
+            sys.exit(1)
+        recorded = json.loads(BENCH_JSON.read_text())
+        failed = _check(out, recorded)
+        for name, measured in out["budget_s"].items():
+            budget = recorded.get("budget_s", {}).get(name)
+            if budget is None:
+                continue
+            verdict = "OK" if measured <= 2.0 * budget else "REGRESSION"
+            print(f"perf-smoke {name}: {measured*1e3:.1f}ms vs budget "
+                  f"{budget*1e3:.1f}ms (2x gate) {verdict}")
+            failed |= verdict != "OK"
+        if failed:
+            print("bench_dse smoke failed (perf >2x budget or a DSE "
+                  "correctness gate broke)", file=sys.stderr)
+            sys.exit(1)
+        return
+    if _check(out):
+        sys.exit(1)
+    out["recorded"] = time.strftime("%Y-%m-%d")
+    out["note"] = ("batched analytic grid vs process-pool exact sweep on "
+                   "the gemma-2b decode chain; DAG bound bracket on the "
+                   "vgg16 tile DAG; Fig-13 port study via sweep.optimize "
+                   "(bench_soc.port_study_optimize); budget_s feeds the "
+                   "tools/ci.sh --quick 2x gate")
+    BENCH_JSON.write_text(json.dumps(out, indent=2) + "\n")
+    print(f"wrote {BENCH_JSON}")
+
+
+if __name__ == "__main__":
+    main()

@@ -26,6 +26,7 @@ MODULES = [
     ("training", "training — pipeline-parallel schedule x microbatch x "
                  "stage count"),
     ("engine_perf", "infra — executor scaling (small/medium/5k-op sweep)"),
+    ("dse", "DSE — vectorized analytic cost model + gradient port study"),
 ]
 
 

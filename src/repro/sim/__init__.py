@@ -34,13 +34,26 @@ topology is bit-identical to the flat config it expands.
 Design-space exploration goes through ``repro.sim.sweep``:
   sweep(program, configs)     one lowering + shared dependency plan, many
                               configs (serial / threads / processes)
+  batched(program, configs)   the analytic cost model prices the whole
+                              grid as one vectorized parameter matrix
+                              (bit-identical to the engine on chains, a
+                              certified lower/upper bracket on DAGs) and
+                              exact-verifies the top-k winners
+  optimize(program, space)    multi-start gradient descent over
+                              continuous hardware parameters (jax
+                              analytic gradients when available, batched
+                              finite differences otherwise); the event
+                              engine verifies the returned design
   topology_sweep(program, topologies, base_config)
                               the same, over an SoC-topology grid
   lower_graph / lower_hlo     memoized lowerings keyed on
                               (graph identity, batch, tile params)
 The executor core is O(E log E) (heap ready queue, incremental HBM-port
 contention) with a prefix-sum fast path for linear-chain programs that is
-bit-identical to the event loop.
+bit-identical to the event loop; the fast path's per-op terms are the
+pure functions of ``repro.sim.costmodel`` (``hw.PARAM_FIELDS`` vector ->
+cost terms), which is what makes the batched/differentiable DSE layer
+exact where it matters.
 
 Served workloads go through ``repro.sim.serving``: a request trace
 (Poisson / bursty / loaded records) replayed against a batching policy
@@ -55,9 +68,12 @@ activation/gradient transfers contending on links — reporting step time,
 per-stage utilization and the measured pipeline bubble fraction against
 the analytic ``(p-1)/(m+p-1)`` bound.
 """
+from repro.sim.costmodel import (CostModel, Unsupported,  # noqa: F401
+                                 relaxation_err)
 from repro.sim.engine import (EngineConfig, EngineResult, Plan,  # noqa: F401
                               chain_op_costs, prepare, run)
-from repro.sim.hw import Device, Link, SoCTopology  # noqa: F401
+from repro.sim.hw import (Device, Link, PARAM_FIELDS,  # noqa: F401
+                          SoCTopology, apply_params, params_from_config)
 from repro.sim.ir import (CostedOp, Program, from_decode,  # noqa: F401
                           from_graph, from_hlo, from_serving_step,
                           from_training_step, partition_stages)
@@ -65,8 +81,9 @@ from repro.sim.serving import (Request, ServingResult,  # noqa: F401
                                as_serving_records, bursty_trace, load_trace,
                                poisson_trace, save_trace, simulate_serving,
                                serving_sweep, trace_from_records)
-from repro.sim.sweep import (as_records, as_training_records,  # noqa: F401
-                             lower_graph, lower_hlo, sweep, topology_sweep,
-                             training_sweep)
+from repro.sim.sweep import (BatchedSweep, OptimizeResult,  # noqa: F401
+                             as_records, as_training_records, batched,
+                             lower_graph, lower_hlo, optimize, sweep,
+                             topology_sweep, training_sweep)
 from repro.sim.training import (TrainingResult, bubble_bound,  # noqa: F401
                                 schedule_order, simulate_training)

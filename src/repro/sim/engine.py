@@ -786,7 +786,6 @@ def _run_chain(program: Program, config: EngineConfig, topo: SoCTopology
 
     ops = program.ops
     m = len(ops)
-    em = config.energy
 
     # resolve the chain's placement: the vectorized model mirrors exactly
     # one device cost signature on one link
@@ -810,81 +809,22 @@ def _run_chain(program: Program, config: EngineConfig, topo: SoCTopology
               or l.name != link.name):
             return None
     ports = _link_ports(config, link)
-    peak = eff.peak_flops
 
-    flops = np.array([op.flops for op in ops], dtype=np.float64)
-    dot = np.array([op.dot_flops for op in ops], dtype=np.float64)
-    nb = np.array([op.bytes_in + op.bytes_out for op in ops],
-                  dtype=np.float64)
-    coll = np.array([op.collective_bytes for op in ops], dtype=np.float64)
-    has_dur = np.array([op.duration_s is not None for op in ops], dtype=bool)
-    dur = np.array([op.duration_s or 0.0 for op in ops], dtype=np.float64)
-    has_tov = np.array([op.transfer_s is not None for op in ops], dtype=bool)
-    tov = np.array([op.transfer_s or 0.0 for op in ops], dtype=np.float64)
+    # the per-op terms live in repro.sim.costmodel (shared verbatim with
+    # the batched analytic model / DSE layer); called with this config's
+    # scalar parameters they are the exact IEEE operations this fast path
+    # always performed
+    from repro.sim import costmodel
+    if eff.interface not in costmodel.CHAIN_INTERFACES:
+        return None                         # registered custom interface
+    t = costmodel.chain_terms(
+        costmodel.op_arrays(ops),
+        costmodel.ChainParams.from_engine(config, eff, ports))
+    comp, full, xe, factor = t.comp, t.full, t.xe, t.factor
+    hc, xfer, cdur = t.hc, t.xfer, t.cdur
+    has_h, has_x, has_c = t.has_h, t.has_x, t.has_c
 
-    with np.errstate(divide="ignore", invalid="ignore"):
-        comp = np.where(has_dur, dur, flops / peak)
-
-        # interface time/energy for the bytes path — same formulas, same
-        # operation order as core.interfaces / EnergyModel, elementwise
-        iface = eff.interface
-        if iface == "hbm":
-            t_if = nb / eff.hbm_bw
-            e_if = (nb * em.pj_per_byte_hbm) * 1e-12
-        elif iface == "ideal":
-            t_if = np.zeros(m)
-            e_if = np.zeros(m)
-        elif iface == "dma":
-            from repro.core.interfaces import DMA_LAUNCH_S, FLUSH_PER_BYTE
-            n_tr = np.maximum(1.0,
-                              np.floor_divide(nb, eff.dma_transfer_bytes))
-            t_if = (2 * nb / eff.hbm_bw + n_tr * DMA_LAUNCH_S
-                    + nb * FLUSH_PER_BYTE)
-            e_if = ((2 * nb) * em.pj_per_byte_hbm) * 1e-12 \
-                + ((nb * 0.05) * em.pj_per_byte_host) * 1e-12
-        elif iface == "acp":
-            res_frac = np.where(nb < eff.vmem_resident_bytes, 1.0, 0.5)
-            spill = nb * (1.0 - res_frac)
-            t_if = (nb * res_frac) / eff.vmem_bw \
-                + 2 * spill / eff.hbm_bw
-            e_if = ((2 * nb * res_frac) * em.pj_per_byte_vmem) * 1e-12 \
-                + ((2 * spill) * em.pj_per_byte_hbm) * 1e-12
-        else:                               # registered custom interface
-            return None
-        t_if = t_if / eff.datapath_scale
-        if eff.overlap:
-            expo_if = np.maximum(t_if - dot / peak, 0.0)
-        else:
-            expo_if = t_if
-
-        zero_b = nb == 0.0
-        full = np.where(has_tov, tov, np.where(zero_b, 0.0, t_if))
-        expo = np.where(has_tov, tov, np.where(zero_b, 0.0, expo_if))
-        xe = np.where(has_tov, ((tov * eff.hbm_bw) * em.pj_per_byte_hbm)
-                      * 1e-12, np.where(zero_b, 0.0, e_if))
-
-        # chain transfers never overlap -> every window sees live == 1
-        if ports <= 0:
-            factor = 1.0
-        else:
-            factor = max(1.0, 1 / ports)
-        has_x = expo > 0.0
-        xfer = np.where(has_x, expo * factor, 0.0)
-
-        if config.host_bw:
-            hc = config.host_dispatch_s + (nb / config.host_bw) \
-                / config.host_threads
-        else:
-            hc = np.full(m, config.host_dispatch_s)
-    has_h = hc > 0.0
-    has_c = coll > 0.0
-    cdur = np.where(has_c, coll / config.ici_bw, 0.0)
-
-    flat = np.empty(4 * m, dtype=np.float64)
-    flat[0::4] = np.where(has_h, hc, 0.0)
-    flat[1::4] = xfer
-    flat[2::4] = comp
-    flat[3::4] = cdur
+    flat = costmodel.interleave(t)
     if not np.isfinite(flat).all() or (m and flat.min() < 0.0):
         return None                         # event loop handles the exotic
     # itertools.accumulate guarantees the loop's strict left-to-right float

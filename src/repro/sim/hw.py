@@ -24,9 +24,9 @@ and is bit-identical to the pre-topology engine by construction
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from functools import lru_cache
-from typing import Dict, Optional, Tuple
+from typing import Dict, Mapping, Optional, Sequence, Tuple, Union
 
 PEAK_FLOPS = 197e12          # bf16 per chip
 HBM_BW = 819e9               # bytes/s per chip
@@ -168,3 +168,70 @@ class SoCTopology:
 def _homogeneous_cached(n: int) -> SoCTopology:
     return SoCTopology(devices=tuple(Device(f"acc{i}") for i in range(n)),
                        name=f"{n}accel")
+
+
+# ---------------------------------------------------------------------------
+# continuous hardware-parameter vector <-> EngineConfig mapping
+#
+# The analytic cost model (``repro.sim.costmodel``) and the DSE layer
+# (``sweep.batched`` / ``sweep.optimize``) treat a design point as a flat
+# float vector over these fields; everything else on the config
+# (interface choice, energy constants, tile thresholds) is categorical
+# and stays fixed within a batch.  ``host_threads``/``hbm_ports`` are
+# kept continuous here — the engine only ever divides by them, so a
+# fractional value is a perfectly well-defined (if physically idealized)
+# design point, and keeping them continuous is what makes the gradient
+# path smooth.
+
+PARAM_FIELDS: Tuple[str, ...] = (
+    "peak_flops", "datapath_scale", "hbm_bw", "vmem_bw", "ici_bw",
+    "hbm_ports", "host_dispatch_s", "host_bw", "host_threads")
+
+ParamsLike = Union[Mapping[str, float], Sequence[float]]
+
+
+def params_from_config(config) -> Tuple[float, ...]:
+    """The ``PARAM_FIELDS`` vector of an ``EngineConfig``-like object (any
+    object carrying the nine continuous fields), as plain floats in field
+    order."""
+    return tuple(float(getattr(config, f)) for f in PARAM_FIELDS)
+
+
+def params_dict(params: ParamsLike) -> Dict[str, float]:
+    """Normalize a params mapping/sequence to a ``{field: float}`` dict
+    (sequences must be full-length and are zipped against PARAM_FIELDS)."""
+    if isinstance(params, Mapping):
+        unknown = set(params) - set(PARAM_FIELDS)
+        if unknown:
+            raise ValueError(
+                f"unknown hardware parameters {sorted(unknown)}; "
+                f"continuous fields are {PARAM_FIELDS}")
+        return {k: float(v) for k, v in params.items()}
+    vals = list(params)
+    if len(vals) != len(PARAM_FIELDS):
+        raise ValueError(
+            f"expected {len(PARAM_FIELDS)} values in PARAM_FIELDS order, "
+            f"got {len(vals)}")
+    return {k: float(v) for k, v in zip(PARAM_FIELDS, vals)}
+
+
+def apply_params(config, params: ParamsLike):
+    """A copy of ``config`` with the given continuous fields installed.
+
+    ``params`` is either a ``{field: value}`` mapping (partial is fine)
+    or a full vector in ``PARAM_FIELDS`` order.  Values stay floats —
+    see the module note on continuous ``host_threads``/``hbm_ports`` —
+    so the exact engine prices precisely the point the analytic model
+    evaluated.  Explicit per-device/per-link overrides in
+    ``config.topology`` are NOT rewritten (the flat fields are only
+    inheritance defaults there); use ``with_ports`` for the port study."""
+    return replace(config, **params_dict(params))
+
+
+def with_ports(topo: SoCTopology, ports: float) -> SoCTopology:
+    """A copy of ``topo`` with every link's ``ports`` set to ``ports``
+    (an implicit shared link is made explicit first) — the knob the
+    Fig-13-style port studies turn."""
+    links = topo.links if topo.links else (_DEFAULT_LINK,)
+    return replace(topo, links=tuple(replace(l, ports=float(ports))
+                                     for l in links))

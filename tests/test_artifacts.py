@@ -18,6 +18,7 @@ BENCH_ENGINE = Path("BENCH_engine.json")
 BENCH_SERVING = Path("BENCH_serving.json")
 BENCH_SOC = Path("BENCH_soc.json")
 BENCH_TRAINING = Path("BENCH_training.json")
+BENCH_DSE = Path("BENCH_dse.json")
 
 
 def _finite_pos(x) -> bool:
@@ -159,6 +160,38 @@ def test_bench_training_schema():
         if m > min(g["n_microbatches"]):
             prev = by_cell[(model, schedule, p, min(g["n_microbatches"]))]
             assert rec["bubble_bound"] <= prev["bubble_bound"]
+    assert all(_finite_pos(v) for v in b["budget_s"].values())
+
+
+@pytest.mark.skipif(not BENCH_DSE.exists(), reason="bench not present")
+def test_bench_dse_schema():
+    b = json.loads(BENCH_DSE.read_text())
+    assert set(b) >= {"speedup", "dag_fidelity", "port_study", "budget_s",
+                      "recorded", "note"}
+    sp = b["speedup"]
+    assert sp["n_configs"] >= 1024 and sp["n_ops"] >= 5000
+    assert _finite_pos(sp["batched_s"]) and _finite_pos(sp["process_s"])
+    # the recorded headline claim: the analytic batch beats the
+    # process-pool engine sweep by the acceptance floor
+    assert sp["speedup_vs_process"] >= 50.0
+    assert sp["speedup_vs_process"] == pytest.approx(
+        sp["process_s"] / sp["batched_s"], rel=0.05)
+    # on chains the model is the engine: zero relaxation error, and the
+    # analytic winner is the true winner
+    assert sp["max_verified_relaxation_err"] == 0.0
+    assert sp["best_matches_exact"] is True
+    fid = b["dag_fidelity"]
+    assert fid["bracket_holds"] is True
+    assert math.isfinite(fid["lb_err_mean"]) and fid["lb_err_mean"] >= 0.0
+    assert fid["lb_err_max"] < 1.0          # lower bound stays positive
+    assert fid["ub_over_exact_mean"] >= 1.0
+    ps = b["port_study"]
+    assert len(ps["grid_exact_s"]) == len(ps["grid_ports"])
+    assert all(_finite_pos(e) for e in ps["grid_exact_s"])
+    assert _finite_pos(ps["opt_exact_s"]) and _finite_pos(ps["grid_best_s"])
+    # optimize lands within 2% of the exact grid best (acceptance gate)
+    assert abs(ps["within_frac"]) <= 0.02
+    assert ps["knee_ports"] in ps["grid_ports"]
     assert all(_finite_pos(v) for v in b["budget_s"].values())
 
 

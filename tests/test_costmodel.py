@@ -1,0 +1,352 @@
+"""The analytic cost model: bit-identical to the engine on chains, a
+certified lower/upper bracket on DAGs, and the gradient-DSE layer on top.
+
+The chain tests assert ``==`` (not approx): ``engine._run_chain`` computes
+its per-op terms through the very same ``costmodel.chain_terms`` the
+batched matrix path evaluates, and numpy's row-wise ``cumsum`` adds in the
+same strict left-to-right order as the event loop's ``accumulate`` — so
+any drift is a real extraction bug, not float noise."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.apps.paper_graphs import build_paper_graph
+from repro.configs.gemma_2b import SMOKE
+from repro.configs.paper_nets import PAPER_NETS
+from repro.core.energy import EnergyModel
+from repro.sim import engine, hw, ir
+from repro.sim.costmodel import (CHAIN_INTERFACES, CostModel, Unsupported,
+                                 _has_jax, relaxation_err)
+from repro.sim.hw import (PARAM_FIELDS, SoCTopology, apply_params,
+                          params_dict, params_from_config, with_ports)
+from repro.sim.sweep import as_records, batched, lower_graph, optimize, sweep
+from tests._hyp import given, settings, st
+
+HLO = {"flops": 1e15, "dot_flops": 9e14, "bytes": 1e12,
+       "collective_bytes": 1e10, "wire_bytes": 1.5e10,
+       "transcendentals": 1e9, "collectives": {}, "n_while": 1,
+       "custom_calls": {}}
+
+
+def _rand_chain(rng, n=24):
+    """A serial chain mixing every op flavor the fast path prices:
+    derived compute, dot-heavy, collective, explicit duration/transfer."""
+    ops, prev = [], ()
+    for i in range(n):
+        kind = int(rng.integers(0, 5))
+        if kind == 0:
+            op = ir.CostedOp(f"op{i}", deps=prev,
+                             duration_s=float(rng.uniform(1e-6, 1e-3)))
+        elif kind == 1:
+            op = ir.CostedOp(f"op{i}", deps=prev,
+                             collective_bytes=float(rng.uniform(0, 1e8)),
+                             wire_bytes=float(rng.uniform(0, 1e8)))
+        else:
+            op = ir.CostedOp(
+                f"op{i}", deps=prev,
+                flops=float(rng.uniform(0, 1e12)),
+                dot_flops=float(rng.uniform(0, 5e11)),
+                bytes_in=float(rng.uniform(0, 1e9)),
+                bytes_out=float(rng.uniform(0, 1e8)),
+                transcendentals=float(rng.uniform(0, 1e6)),
+                transfer_s=(float(rng.uniform(0, 1e-4))
+                            if kind == 4 else None))
+        ops.append(op)
+        prev = (f"op{i}",)
+    return ir.Program(ops, name="rand_chain")
+
+
+def _rand_config(rng, iface):
+    return engine.EngineConfig(
+        interface=iface,
+        n_workers=int(rng.integers(1, 9)),
+        peak_flops=float(rng.uniform(1e13, 4e14)),
+        datapath_scale=float(rng.choice((1.0, 0.5, 0.25))),
+        hbm_bw=float(rng.uniform(1e11, 1.6e12)),
+        vmem_bw=float(rng.uniform(1e12, 2e13)),
+        ici_bw=float(rng.uniform(1e10, 1e11)),
+        hbm_ports=float(rng.choice((0.0, 0.5, 1.0, 2.0, 4.0))),
+        host_dispatch_s=float(rng.choice((0.0, 5e-7, 1e-6))),
+        host_bw=float(rng.choice((0.0, 2e10))),
+        host_threads=int(rng.integers(1, 5)))
+
+
+# ---------------------------------------------------------------------------
+# chains: the model IS the engine fast path, bit for bit
+
+
+@pytest.mark.parametrize("iface", sorted(CHAIN_INTERFACES))
+def test_chain_bit_identical_random_chains(iface):
+    rng = np.random.default_rng(hash(iface) % 2**32)
+    for trial in range(4):
+        prog = _rand_chain(rng)
+        assert engine.prepare(prog).is_chain
+        cfgs = [_rand_config(rng, iface) for _ in range(6)]
+        model = CostModel(prog, cfgs[0], backend="numpy")
+        P = np.array([params_from_config(c) for c in cfgs])
+        ms = model.makespans(P)
+        for got, cfg in zip(ms, cfgs):
+            assert float(got) == engine.run(prog, cfg).makespan
+
+
+@pytest.mark.parametrize("make", [
+    lambda: ir.from_decode(SMOKE, n_tokens=12, ops_per_token=4),
+    lambda: ir.from_hlo(HLO, n_ops=16),
+], ids=["from_decode", "from_hlo"])
+def test_chain_bit_identical_real_lowerings(make):
+    prog = make()
+    assert engine.prepare(prog).is_chain
+    rng = np.random.default_rng(3)
+    for iface in sorted(CHAIN_INTERFACES):
+        cfgs = [_rand_config(rng, iface) for _ in range(4)]
+        bs = batched(prog, cfgs, top_k=len(cfgs))
+        assert bs.is_chain and bs.backend == "numpy"
+        for v in bs.verified:
+            assert v["relaxation_err"] == 0.0
+            assert v["analytic_s"] == v["exact_s"]
+        np.testing.assert_array_equal(bs.lower, bs.upper)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(min_value=0, max_value=2**32 - 1),
+       st.sampled_from(sorted(CHAIN_INTERFACES)))
+def test_chain_bit_identical_property(seed, iface):
+    rng = np.random.default_rng(seed)
+    prog = _rand_chain(rng, n=int(rng.integers(1, 16)))
+    cfg = _rand_config(rng, iface)
+    model = CostModel(prog, cfg, backend="numpy")
+    assert model.makespan() == engine.run(prog, cfg).makespan
+
+
+def test_empty_program_is_zero():
+    prog = ir.Program([], name="empty")
+    model = CostModel(prog, engine.EngineConfig(), backend="numpy")
+    assert model.makespan() == 0.0
+    lo, up = model.bounds(np.array([model.params0]))
+    assert lo[0] == 0.0 and up[0] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# DAGs: certified lower <= exact <= upper
+
+
+def test_dag_bounds_bracket_tile_graph():
+    g = build_paper_graph(PAPER_NETS["lenet5"], batch=1)
+    dag = lower_graph(g, batch=1, max_tile_elems=2048)
+    assert not engine.prepare(dag).is_chain
+    rng = np.random.default_rng(11)
+    for iface in sorted(CHAIN_INTERFACES):
+        cfgs = [dataclasses.replace(_rand_config(rng, iface), n_workers=nw)
+                for nw in (1, 2, 8) for _ in range(2)]
+        for cfg in cfgs:
+            model = CostModel(dag, cfg, backend="numpy")
+            lo, up = model.bounds(np.array([params_from_config(cfg)]))
+            exact = engine.run(dag, cfg).makespan
+            assert lo[0] <= exact * (1 + 1e-12), (iface, cfg)
+            assert exact <= up[0] * (1 + 1e-12), (iface, cfg)
+            err = relaxation_err(engine.run(dag, cfg))
+            assert err is not None and err <= 1e-12
+
+
+def test_dag_single_worker_serial_chain_collapses():
+    """On one worker with no contention (ports=0) an embarrassingly
+    parallel DAG is priced exactly: every op runs back to back, so the
+    work bound meets the serial sum and lower == exact == upper."""
+    ops = [ir.CostedOp(f"op{i}", duration_s=1e-4) for i in range(8)]
+    prog = ir.Program(ops, name="par8")
+    cfg = engine.EngineConfig(n_workers=1, interface="ideal")
+    model = CostModel(prog, cfg, backend="numpy")
+    lo, up = model.bounds(np.array([params_from_config(cfg)]))
+    exact = engine.run(prog, cfg).makespan
+    assert lo[0] == pytest.approx(exact, rel=1e-12)
+    assert up[0] == pytest.approx(exact, rel=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# jax backend: same terms, float32 jit+vmap (allclose, not bit-equal)
+
+
+@pytest.mark.skipif(not _has_jax(), reason="jax not importable")
+def test_jax_chain_matches_numpy():
+    prog = ir.from_decode(SMOKE, n_tokens=16, ops_per_token=4)
+    rng = np.random.default_rng(5)
+    cfgs = [_rand_config(rng, "hbm") for _ in range(8)]
+    P = np.array([params_from_config(c) for c in cfgs])
+    m_np = CostModel(prog, cfgs[0], backend="numpy")
+    m_jx = CostModel(prog, cfgs[0], backend="jax")
+    np.testing.assert_allclose(m_jx.makespans(P), m_np.makespans(P),
+                               rtol=1e-4)
+
+
+@pytest.mark.skipif(not _has_jax(), reason="jax not importable")
+def test_jax_gradient_agrees_with_finite_differences():
+    prog = ir.from_decode(SMOKE, n_tokens=8, ops_per_token=4)
+    space = {"peak_flops": (1e13, 4e14), "hbm_bw": (1e11, 1.6e12)}
+    o_jx = CostModel(prog, backend="jax").objective(space)
+    o_np = CostModel(prog, backend="numpy").objective(space)
+    assert o_jx.backend == "jax" and o_np.backend == "numpy"
+    Z = np.array([[0.3, 0.7], [0.5, 0.5], [0.9, 0.1]])
+    np.testing.assert_allclose(o_jx.grad(Z), o_np.grad(Z),
+                               rtol=5e-2, atol=1e-3)
+
+
+def test_jax_backend_rejects_dags():
+    g = build_paper_graph(PAPER_NETS["lenet5"], batch=1)
+    dag = lower_graph(g, batch=1, max_tile_elems=2048)
+    with pytest.raises(Unsupported):
+        CostModel(dag, backend="jax")
+
+
+# ---------------------------------------------------------------------------
+# optimize(): the returned design is exact-verified and competitive
+
+
+def test_optimize_latency_hits_grid_best():
+    prog = ir.from_decode(SMOKE, n_tokens=12, ops_per_token=4)
+    base = engine.EngineConfig(interface="hbm", host_dispatch_s=1e-6)
+    space = {"peak_flops": (1e13, 4e14), "hbm_bw": (1e11, 1.6e12)}
+    grid = [apply_params(base, {"peak_flops": p, "hbm_bw": b})
+            for p in np.geomspace(1e13, 4e14, 8)
+            for b in np.geomspace(1e11, 1.6e12, 8)]
+    grid_best = min(r.makespan for r in sweep(prog, grid))
+    opt = optimize(prog, space, base_config=base, n_starts=4, steps=40,
+                   seed=0, backend="numpy")
+    assert opt.exact_s <= grid_best * 1.02
+    assert opt.relaxation_err == 0.0        # chain: model == engine
+    assert opt.feasible is None and opt.n_evals > 0
+
+
+def test_optimize_target_mode_prefers_feasible_cheap_designs():
+    prog = ir.from_decode(SMOKE, n_tokens=12, ops_per_token=4)
+    base = engine.EngineConfig(interface="hbm", host_dispatch_s=1e-6)
+    space = {"peak_flops": (1e13, 4e14), "hbm_bw": (1e11, 1.6e12)}
+    lo = engine.run(prog, apply_params(base, {"peak_flops": 1e13,
+                                              "hbm_bw": 1e11})).makespan
+    hi = engine.run(prog, apply_params(base, {"peak_flops": 4e14,
+                                              "hbm_bw": 1.6e12})).makespan
+    target = float(np.sqrt(lo * hi))        # feasibility is nontrivial
+    opt = optimize(prog, space, base_config=base, target_s=target,
+                   n_starts=6, steps=40, seed=0, backend="numpy")
+    assert opt.feasible is True
+    assert opt.exact_s <= target * (1 + 1e-9)
+    # cheaper than the max-hardware corner (mean z strictly below 1)
+    assert opt.objective < 1.0
+    assert opt.candidates and opt.candidates[0]["config"] is opt.config
+
+
+def test_optimize_rejects_topologies_and_unknown_fields():
+    prog = ir.from_decode(SMOKE, n_tokens=4, ops_per_token=2)
+    topo_cfg = engine.EngineConfig(topology=SoCTopology.homogeneous(2))
+    with pytest.raises(Unsupported):
+        optimize(prog, {"hbm_bw": (1e11, 1e12)}, base_config=topo_cfg)
+    with pytest.raises(ValueError):
+        optimize(prog, {"warp_speed": (1.0, 2.0)})
+
+
+# ---------------------------------------------------------------------------
+# parameter-vector mapping (hw.py)
+
+
+def test_params_roundtrip():
+    cfg = engine.EngineConfig(peak_flops=1e14, hbm_ports=2.0,
+                              host_dispatch_s=1e-6)
+    vec = params_from_config(cfg)
+    assert len(vec) == len(PARAM_FIELDS)
+    again = apply_params(engine.EngineConfig(), vec)
+    assert params_from_config(again) == vec
+    # partial mapping touches only the named fields
+    bumped = apply_params(cfg, {"hbm_bw": 5e11})
+    assert bumped.hbm_bw == 5e11 and bumped.peak_flops == cfg.peak_flops
+
+
+def test_params_dict_validates():
+    with pytest.raises(ValueError):
+        params_dict({"not_a_knob": 1.0})
+    with pytest.raises(ValueError):
+        params_dict([1.0, 2.0])             # wrong length vector
+
+
+def test_with_ports_rewrites_every_link():
+    topo = SoCTopology.homogeneous(4)       # implicit shared link
+    t2 = with_ports(topo, 2.0)
+    assert t2.links and all(l.ports == 2.0 for l in t2.links)
+    two = SoCTopology(devices=topo.devices,
+                      links=(hw.Link("a", ports=1.0), hw.Link("b")))
+    t3 = with_ports(two, 0.5)
+    assert [l.ports for l in t3.links] == [0.5, 0.5]
+
+
+# ---------------------------------------------------------------------------
+# Unsupported boundaries: the event engine stays the universal path
+
+
+def test_custom_interface_is_unsupported_but_still_runs():
+    engine.INTERFACES["probe-iface"] = lambda nbytes, cfg: (nbytes / 1e9,
+                                                            0.0)
+    try:
+        prog = ir.from_decode(SMOKE, n_tokens=4, ops_per_token=2)
+        cfg = engine.EngineConfig(interface="probe-iface")
+        with pytest.raises(Unsupported):
+            CostModel(prog, cfg)
+        res = engine.run(prog, cfg)         # event loop still prices it
+        assert res.makespan > 0
+        assert relaxation_err(res) is None
+    finally:
+        del engine.INTERFACES["probe-iface"]
+
+
+def test_custom_energy_model_is_unsupported():
+    class Doubled(EnergyModel):
+        pass
+
+    cfg = engine.EngineConfig(energy=Doubled())
+    prog = ir.from_decode(SMOKE, n_tokens=4, ops_per_token=2)
+    with pytest.raises(Unsupported):
+        CostModel(prog, cfg)
+
+
+def test_heterogeneous_topology_is_unsupported():
+    topo = SoCTopology(devices=(hw.Device("big", peak_flops=2e14),
+                                hw.Device("small", peak_flops=5e13)))
+    prog = ir.from_decode(SMOKE, n_tokens=4, ops_per_token=2)
+    with pytest.raises(Unsupported):
+        CostModel(prog, engine.EngineConfig(topology=topo))
+
+
+def test_unknown_backend_rejected():
+    prog = ir.from_decode(SMOKE, n_tokens=4, ops_per_token=2)
+    with pytest.raises(ValueError):
+        CostModel(prog, backend="abacus")
+
+
+# ---------------------------------------------------------------------------
+# record plumbing
+
+
+def test_as_records_relaxation_err_column():
+    prog = ir.from_decode(SMOKE, n_tokens=8, ops_per_token=4)
+    rows = as_records(sweep(prog, [engine.EngineConfig(),
+                                   engine.EngineConfig(interface="dma")]))
+    assert all(row["relaxation_err"] == 0.0 for row in rows)
+    g = build_paper_graph(PAPER_NETS["lenet5"], batch=1)
+    dag = lower_graph(g, batch=1, max_tile_elems=2048)
+    rows = as_records(sweep(dag, [engine.EngineConfig(n_workers=4)]))
+    assert rows[0]["relaxation_err"] <= 1e-12
+
+
+def test_batched_records_and_best():
+    prog = ir.from_decode(SMOKE, n_tokens=8, ops_per_token=4)
+    cfgs = [engine.EngineConfig(peak_flops=p)
+            for p in (5e13, 1e14, 2e14, 4e14)]
+    bs = batched(prog, cfgs, top_k=2)
+    recs = bs.records()
+    assert len(recs) == len(cfgs)
+    exact_rows = [r for r in recs if r["exact_s"] is not None]
+    assert len(exact_rows) == 2
+    assert bs.best()["exact_s"] == min(r["exact_s"] for r in exact_rows)
+    assert bs.top(1) == [int(np.argmin(bs.makespans))]
+    empty = batched(prog, [], top_k=3)
+    assert empty.records() == [] and len(empty.makespans) == 0
+    with pytest.raises(ValueError):
+        batched(prog, cfgs, top_k=0).best()

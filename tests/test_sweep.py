@@ -77,6 +77,56 @@ def test_lower_hlo_memoizes_on_content():
     assert lower_hlo(dict(HLO, flops=2e15), n_ops=8) is not p1
 
 
+def test_lowering_caches_are_true_lru(monkeypatch):
+    """A hit refreshes recency: the hot entry survives eviction while the
+    cold one is dropped (OrderedDict move_to_end semantics)."""
+    import importlib
+    # the package re-exports the sweep() function under the same name, so
+    # plain ``import repro.sim.sweep as m`` would bind the function
+    sweep_mod = importlib.import_module("repro.sim.sweep")
+    clear_caches()
+    monkeypatch.setattr(sweep_mod, "_CACHE_MAX", 2)
+    hot = lower_hlo(HLO, n_ops=2)
+    cold = lower_hlo(HLO, n_ops=3)
+    assert lower_hlo(HLO, n_ops=2) is hot       # refresh 'hot'
+    lower_hlo(HLO, n_ops=4)                     # evicts LRU = 'cold'
+    assert lower_hlo(HLO, n_ops=2) is hot       # survived
+    assert lower_hlo(HLO, n_ops=3) is not cold  # was evicted, re-lowered
+
+    g = build_paper_graph(PAPER_NETS["lenet5"], batch=1)
+    hot = lower_graph(g, batch=1, max_tile_elems=2048)
+    cold = lower_graph(g, batch=2, max_tile_elems=2048)
+    assert lower_graph(g, 1, 2048) is hot
+    lower_graph(g, batch=3, max_tile_elems=2048)
+    assert lower_graph(g, 1, 2048) is hot
+    assert lower_graph(g, 2, 2048) is not cold
+    clear_caches()
+
+
+def test_process_pool_creation_failure_falls_back_to_serial(monkeypatch):
+    """Platform/pool failures degrade to serial with identical results."""
+    import concurrent.futures
+
+    def refuse(*a, **k):
+        raise OSError("no fork for you")
+
+    monkeypatch.setattr(concurrent.futures, "ProcessPoolExecutor", refuse)
+    prog = ir.from_hlo(HLO, n_ops=8)
+    got = sweep(prog, CONFIGS, executor="process")
+    for a, b in zip(got, sweep(prog, CONFIGS, executor="serial")):
+        _identical(a, b)
+
+
+def test_process_task_errors_propagate():
+    """A genuine error raised by engine.run inside a worker is NOT
+    swallowed by the pool-failure fallback: it reaches the caller with
+    its own type (the old bare ``except Exception`` hid these)."""
+    prog = ir.from_hlo(HLO, n_ops=4)
+    bad = dataclasses.replace(CONFIGS[0], interface="carrier-pigeon")
+    with pytest.raises(ValueError, match="interface"):
+        sweep(prog, [CONFIGS[0], bad], executor="process")
+
+
 def test_as_records_is_tidy():
     prog = ir.from_hlo(HLO, n_ops=4)
     rows = as_records(sweep(prog, CONFIGS))
@@ -86,7 +136,8 @@ def test_as_records_is_tidy():
         assert row["n_workers"] == cfg.n_workers
         assert row["makespan_s"] > 0
         assert set(row) >= {"program", "n_ops", "makespan_s", "transfer_s",
-                            "total_j", "utilization", "bound"}
+                            "total_j", "utilization", "bound",
+                            "relaxation_err"}
 
 
 def test_utilization_counts_provisioned_workers():

@@ -47,6 +47,12 @@ python -m benchmarks.bench_engine_perf --quick
 # bit-identity probe
 python -m benchmarks.bench_soc --quick
 
+# DSE smoke: the vectorized analytic grid within 2x of its BENCH_dse.json
+# budget + the correctness gates (chain relaxation_err == 0, DAG bracket
+# holds, optimize within 2% of the port-study grid best, recorded
+# batched-vs-process speedup >= 50x)
+python -m benchmarks.bench_dse --quick
+
 # training smoke: the pipeline-parallel sweep within 2x of its
 # BENCH_training.json budget + the schedule probes (1F1B never loses to
 # GPipe on homogeneous uncontended stages; ideal bubble == (p-1)/(m+p-1))
