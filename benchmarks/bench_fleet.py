@@ -1,0 +1,317 @@
+"""Fleet-scale serving replay: the memoized fast path at 1M requests.
+
+Four studies, all feeding ``BENCH_fleet.json`` at the repo root:
+
+* **headline** — a 1M-request diurnal trace replayed across a 4-replica
+  gemma-2b fleet through ``simulate_fleet`` (one shared
+  ``StepCostTable``).  Records the simulated-request rate and the memo
+  hit rate.  Acceptance: >= 50k requests/s, <= 20s wall.
+* **speedup** — ``replay_serving`` (memoized lite path) vs
+  ``simulate_serving(memoize=False)`` (per-step ``ir.from_serving_step``
+  + ``engine.chain_op_costs`` + the engine run) on the same 10k-request
+  trace.  Acceptance: >= 10x, bit-identical wall/busy clocks.
+* **bit_identity** — replay vs the full co-simulation across all three
+  batching policies on a 256-request trace: every ``stats()`` field must
+  match exactly (the memo and the aggregate-counter scheduler change the
+  cost of the simulation, never its arithmetic).
+* **fleet_grid / autoscale** — the router x replica-count grid
+  (``sweep.fleet_sweep``) plus a queue-depth autoscaler ride-through of a
+  bursty trace: SLO attainment, cost-per-token and scale events per cell.
+
+``--quick`` (the ``tools/ci.sh`` perf smoke) replays a 100k-request slice
+against its recorded budget (2x gate), enforces a replay-rate floor at
+HALF the recorded headline rate, and re-runs the bit-identity and
+conservation probes — the 1M-request and unmemoized sides run only in
+full mode.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+import time
+
+from repro.configs.gemma_2b import FULL as GEMMA_2B
+from repro.serve.policy import QueueDepthAutoscaler, get_policy
+from repro.sim.engine import EngineConfig
+from repro.sim.report import row
+from repro.sim.serving import (as_fleet_records, bursty_trace,
+                               diurnal_trace, poisson_trace,
+                               replay_serving, simulate_fleet,
+                               simulate_serving)
+from repro.sim.sweep import fleet_sweep
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+BENCH_JSON = ROOT / "BENCH_fleet.json"
+
+REPLAY_RATE_FLOOR = 50_000.0   # simulated requests/s on the 1M headline
+HEADLINE_WALL_CAP_S = 20.0
+SPEEDUP_FLOOR = 10.0           # replay vs unmemoized co-simulation
+
+N_HEADLINE = 1_000_000
+N_QUICK = 100_000
+CONFIG = EngineConfig(n_workers=1, interface="hbm", hbm_ports=4,
+                      host_dispatch_s=50e-6)
+FLEET_POLICY = get_policy("continuous", max_batch=64)
+
+
+def _headline_trace(n: int):
+    """The diurnal day: 1M requests over a sinusoidal arrival wave."""
+    return diurnal_trace(n, 4000.0, output_len=(4, 16), seed=0,
+                         arrays=True)
+
+
+def _replay_headline(n: int):
+    trace = _headline_trace(n)
+    t0 = time.perf_counter()
+    f = simulate_fleet(GEMMA_2B, trace, FLEET_POLICY, CONFIG,
+                       n_replicas=4, router="round_robin")
+    wall = time.perf_counter() - t0
+    return {"n_requests": n, "n_replicas": f.n_replicas,
+            "router": "round_robin", "policy": FLEET_POLICY.kind,
+            "max_batch": FLEET_POLICY.max_batch,
+            "wall_s": round(wall, 3),
+            "replay_rate_rps": round(n / wall, 1),
+            "n_steps": f.n_steps,
+            "memo_hit_rate": round(f.meta["memo_hit_rate"], 4),
+            "occupancy": round(f.occupancy, 4),
+            "slo_attainment": round(f.slo_attainment(), 4)}, wall
+
+
+def _speedup():
+    """Memoized lite replay vs the unmemoized full co-simulation."""
+    trace = poisson_trace(10_000, 2000.0, output_len=(32, 96), seed=1)
+    policy = get_policy("continuous", max_batch=8)
+    replay_serving(GEMMA_2B, trace[:256], policy, CONFIG)       # warm
+    t0 = time.perf_counter()
+    fast = replay_serving(GEMMA_2B, trace, policy, CONFIG)
+    t_fast = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    slow = simulate_serving(GEMMA_2B, trace, policy, CONFIG,
+                            memoize=False, max_steps=10_000_000)
+    t_slow = time.perf_counter() - t0
+    return {"n_requests": len(trace), "replay_s": round(t_fast, 4),
+            "unmemoized_s": round(t_slow, 3),
+            "speedup": round(t_slow / t_fast, 1),
+            "bit_identical": bool(fast.busy_s == slow.busy_s
+                                  and fast.makespan_s == slow.makespan_s
+                                  and fast.stats() == slow.stats())}
+
+
+def _bit_identity():
+    """Replay == full co-simulation, all policies, every stats field."""
+    ok = True
+    for kind, gen in (("poisson", poisson_trace), ("bursty", bursty_trace)):
+        trace = gen(256, 120.0, seed=3)
+        for pname in ("static", "dynamic", "continuous"):
+            policy = get_policy(pname, max_batch=8)
+            a = simulate_serving(GEMMA_2B, trace, policy, CONFIG)
+            b = replay_serving(GEMMA_2B, trace, policy, CONFIG)
+            ok &= a.stats() == b.stats()
+            f = simulate_fleet(GEMMA_2B, trace, policy, CONFIG,
+                               n_replicas=1)
+            ok &= f.makespan_s == b.makespan_s \
+                and f.busy_s == b.busy_s
+    return {"n_requests": 256, "traces": ["poisson", "bursty"],
+            "policies": ["static", "dynamic", "continuous"],
+            "bit_identical": bool(ok)}
+
+
+def _conservation():
+    """Every routed request is served exactly once, on every router."""
+    import numpy as np
+    trace = diurnal_trace(2000, 500.0, seed=5, arrays=True)
+    ok = True
+    for router in ("round_robin", "least_outstanding", "session_affinity"):
+        f = simulate_fleet(GEMMA_2B, trace, FLEET_POLICY, CONFIG,
+                           n_replicas=3, router=router)
+        ok &= bool(np.isfinite(np.asarray(f.finish_s)).all())
+        ok &= sum(len(r.rid) for r in f.replicas) == f.n_requests
+    return {"n_requests": len(trace), "n_replicas": 3,
+            "all_served_once": bool(ok)}
+
+
+def _fleet_grid():
+    # one replica sustains ~36 req/s under CONFIG, so 100 rps sweeps the
+    # fleet from overloaded (N=1) to comfortable (N=4)
+    results = fleet_sweep(GEMMA_2B, replica_counts=(1, 2, 4),
+                          n_requests=2000, rate_rps=100.0,
+                          config=CONFIG)
+    return as_fleet_records(results)
+
+
+def _autoscale():
+    trace = bursty_trace(5000, 400.0, seed=2)
+    scaler = QueueDepthAutoscaler(min_replicas=1, max_replicas=4,
+                                  scale_up_depth=16.0,
+                                  scale_down_depth=2.0, cooldown_s=0.5)
+    f = simulate_fleet(GEMMA_2B, trace, get_policy("continuous",
+                                                   max_batch=8),
+                       CONFIG, n_replicas=1, router="least_outstanding",
+                       autoscaler=scaler)
+    ups = sum(1 for e in f.scale_events if e.action == "up")
+    return {"n_requests": len(trace), "n_scale_events": len(f.scale_events),
+            "scale_ups": ups, "scale_downs": len(f.scale_events) - ups,
+            "peak_replicas": max((e.n_replicas for e in f.scale_events),
+                                 default=1),
+            "slo_attainment": round(f.slo_attainment(), 4),
+            "cost_per_token_j": f.cost_per_token_j()}
+
+
+def measure(full: bool):
+    out = {"budget_s": {}}
+    rows = []
+
+    n = N_HEADLINE if full else N_QUICK
+    hl, wall = _replay_headline(n)
+    key = "fleet_replay_1m" if full else "fleet_replay_100k_quick"
+    out["headline" if full else "headline_quick"] = hl
+    out["budget_s"][key] = round(wall, 3)
+    rows.append(row(
+        f"fleet/replay_{n//1000}k_diurnal", wall,
+        f"rate={hl['replay_rate_rps']:,.0f}req/s steps={hl['n_steps']} "
+        f"hit={hl['memo_hit_rate']} occ={hl['occupancy']}"))
+    if full:
+        # record the quick-sized budget too, so --quick has a recorded
+        # baseline of its own size to gate against
+        hq, wq = _replay_headline(N_QUICK)
+        out["headline_quick"] = hq
+        out["budget_s"]["fleet_replay_100k_quick"] = round(wq, 3)
+
+        sp = _speedup()
+        out["speedup"] = sp
+        rows.append(row(
+            "fleet/replay_vs_unmemoized", sp["replay_s"],
+            f"speedup={sp['speedup']}x over {sp['n_requests']} requests "
+            f"bit_identical={sp['bit_identical']}"))
+
+    bi = _bit_identity()
+    out["bit_identity"] = bi
+    rows.append(row(
+        "fleet/bit_identity_replay_vs_sim", 0.0,
+        f"policies={len(bi['policies'])}x{len(bi['traces'])}traces "
+        f"identical={bi['bit_identical']}"))
+
+    cons = _conservation()
+    out["conservation"] = cons
+    rows.append(row(
+        "fleet/router_conservation", 0.0,
+        f"routers=3 all_served_once={cons['all_served_once']}"))
+
+    if full:
+        out["fleet_grid"] = _fleet_grid()
+        best = max(out["fleet_grid"], key=lambda r: r["slo_attainment"])
+        rows.append(row(
+            "fleet/router_x_replicas_grid", 0.0,
+            f"cells={len(out['fleet_grid'])} best={best['router']}"
+            f"x{best['n_replicas']} slo={best['slo_attainment']:.3f}"))
+
+        asc = _autoscale()
+        out["autoscale"] = asc
+        rows.append(row(
+            "fleet/queue_depth_autoscaler", 0.0,
+            f"events={asc['n_scale_events']} "
+            f"peak_replicas={asc['peak_replicas']} "
+            f"slo={asc['slo_attainment']:.3f}"))
+    return out, rows
+
+
+def _check(out, recorded=None):
+    """The correctness/perf gates (quick mode checks recorded floors)."""
+    failed = False
+    if not out["bit_identity"]["bit_identical"]:
+        print("fleet smoke: replay is not bit-identical to the full "
+              "co-simulation", file=sys.stderr)
+        failed = True
+    if not out["conservation"]["all_served_once"]:
+        print("fleet smoke: router lost or duplicated requests",
+              file=sys.stderr)
+        failed = True
+    hl = out.get("headline")
+    if hl is not None:
+        if hl["replay_rate_rps"] < REPLAY_RATE_FLOOR:
+            print(f"fleet smoke: headline replay rate "
+                  f"{hl['replay_rate_rps']:,.0f} req/s below the "
+                  f"{REPLAY_RATE_FLOOR:,.0f} floor", file=sys.stderr)
+            failed = True
+        if hl["wall_s"] > HEADLINE_WALL_CAP_S:
+            print(f"fleet smoke: headline wall {hl['wall_s']}s above the "
+                  f"{HEADLINE_WALL_CAP_S}s cap", file=sys.stderr)
+            failed = True
+    else:
+        # quick: the scaled replay must hold half the recorded headline
+        rec_rate = (recorded or {}).get("headline", {}) \
+            .get("replay_rate_rps")
+        q_rate = out["headline_quick"]["replay_rate_rps"]
+        if rec_rate is None or q_rate < rec_rate / 2.0:
+            print(f"fleet smoke: quick replay rate {q_rate:,.0f} req/s "
+                  f"below half the recorded headline "
+                  f"({rec_rate} req/s)", file=sys.stderr)
+            failed = True
+    sp = out.get("speedup") or (recorded or {}).get("speedup", {})
+    if not sp.get("bit_identical", False):
+        print("fleet smoke: speedup probe lost bit-identity",
+              file=sys.stderr)
+        failed = True
+    if sp.get("speedup", 0.0) < SPEEDUP_FLOOR:
+        print(f"fleet smoke: memoized speedup {sp.get('speedup')} below "
+              f"the {SPEEDUP_FLOOR:.0f}x floor", file=sys.stderr)
+        failed = True
+    return failed
+
+
+def run(emit=print):
+    """benchmarks.run driver entry: the probes only (no 1M replay, no
+    unmemoized side, no file writes)."""
+    _, rows = measure(full=False)
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="100k-request replay vs the BENCH_fleet.json "
+                         "budget (2x gate) + half-headline rate floor + "
+                         "bit-identity/conservation probes (CI perf "
+                         "smoke)")
+    args = ap.parse_args()
+    out, rows = measure(full=not args.quick)
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']},\"{r['derived']}\"")
+    if args.quick:
+        if not BENCH_JSON.exists():
+            print(f"no {BENCH_JSON.name}; run without --quick to record "
+                  "budgets", file=sys.stderr)
+            sys.exit(1)
+        recorded = json.loads(BENCH_JSON.read_text())
+        failed = _check(out, recorded)
+        for name, measured in out["budget_s"].items():
+            budget = recorded.get("budget_s", {}).get(name)
+            if budget is None:
+                continue
+            verdict = "OK" if measured <= 2.0 * budget else "REGRESSION"
+            print(f"perf-smoke {name}: {measured:.2f}s vs budget "
+                  f"{budget:.2f}s (2x gate) {verdict}")
+            failed |= verdict != "OK"
+        if failed:
+            print("bench_fleet smoke failed (perf >2x budget, rate below "
+                  "floor, or a fleet correctness gate broke)",
+                  file=sys.stderr)
+            sys.exit(1)
+        return
+    if _check(out):
+        sys.exit(1)
+    out["recorded"] = time.strftime("%Y-%m-%d")
+    out["note"] = ("memoized fleet replay headline (1M-request diurnal "
+                   "trace, 4 replicas) + replay-vs-unmemoized speedup + "
+                   "bit-identity / router-conservation probes + the "
+                   "router x replica grid and queue-depth autoscaler "
+                   "study; budget_s feeds the tools/ci.sh --quick 2x "
+                   "gate")
+    BENCH_JSON.write_text(json.dumps(out, indent=2) + "\n")
+    print(f"wrote {BENCH_JSON}")
+
+
+if __name__ == "__main__":
+    main()

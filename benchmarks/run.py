@@ -27,6 +27,7 @@ MODULES = [
                  "stage count"),
     ("engine_perf", "infra — executor scaling (small/medium/5k-op sweep)"),
     ("dse", "DSE — vectorized analytic cost model + gradient port study"),
+    ("fleet", "fleet — memoized multi-replica serving replay at scale"),
 ]
 
 

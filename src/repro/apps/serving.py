@@ -11,9 +11,11 @@ from __future__ import annotations
 
 from typing import Optional, Sequence, Union
 
-from repro.serve.policy import BatchingPolicy, get_policy
+from repro.serve.policy import (BatchingPolicy, QueueDepthAutoscaler,
+                                RouterPolicy, get_policy)
 from repro.sim.engine import EngineConfig
-from repro.sim.serving import (TRACE_GENERATORS, ServingResult,
+from repro.sim.serving import (TRACE_GENERATORS, FleetResult,
+                               ServingResult, simulate_fleet,
                                simulate_serving)
 
 
@@ -41,3 +43,36 @@ def serve_trace(arch: str = "gemma_2b",
                 output_len=output_len, seed=seed)
     return simulate_serving(cfg, trace, policy,
                             config or EngineConfig(), name=f"{arch}/serve")
+
+
+def serve_fleet(arch: str = "gemma_2b",
+                policy: Union[str, BatchingPolicy] = "continuous", *,
+                n_replicas: int = 2,
+                router: Union[str, RouterPolicy] = "round_robin",
+                autoscaler: Optional[QueueDepthAutoscaler] = None,
+                rate_rps: float = 200.0, n_requests: int = 2000,
+                max_batch: int = 8, trace_kind: str = "diurnal",
+                seed: int = 0, smoke: bool = False,
+                config: Optional[EngineConfig] = None,
+                prompt_len=(16, 128), output_len=(8, 64)) -> FleetResult:
+    """Simulate an N-replica serving fleet of ``arch`` under a router
+    (``round_robin`` | ``least_outstanding`` | ``session_affinity``), an
+    optional ``QueueDepthAutoscaler``, and a synthetic trace
+    (``diurnal`` by default — the daily load wave autoscalers exist
+    for).  The memoized replay path handles million-request traces;
+    ``result.stats()`` has the SLO-attainment / cost-per-token roll-up.
+    """
+    from repro.configs import get_config, get_smoke_config
+    cfg = get_smoke_config(arch) if smoke else get_config(arch)
+    if isinstance(policy, str):
+        policy = get_policy(policy, max_batch=max_batch)
+    gen = TRACE_GENERATORS[trace_kind]
+    kw = {"arrays": True} if trace_kind == "diurnal" else {}
+    trace = gen(n_requests, rate_rps, prompt_len=prompt_len,
+                output_len=output_len, seed=seed, **kw)
+    res = simulate_fleet(cfg, trace, policy, config or EngineConfig(),
+                         n_replicas=n_replicas, router=router,
+                         autoscaler=autoscaler, name=f"{arch}/fleet")
+    res.meta.update({"rate_rps": rate_rps, "trace_kind": trace_kind,
+                     "seed": seed})
+    return res

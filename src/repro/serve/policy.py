@@ -106,3 +106,105 @@ def get_policy(name: str, **kwargs) -> BatchingPolicy:
         raise KeyError(f"unknown batching policy {name!r}; "
                        f"one of {sorted(POLICIES)}") from None
     return cls(**kwargs)
+
+
+# ---------------------------------------------------------------------------
+# fleet-level policies: a router spreads a trace across N replica
+# schedulers (each running a batching policy above), an autoscaler moves N
+
+
+@dataclass(frozen=True)
+class RouterPolicy:
+    """Base router: pick a replica for each arriving request.
+
+    ``route`` returns an index into the *active* replica list.  Routers
+    with ``stateful = True`` need every replica's live queue depth at the
+    arrival instant, so the fleet driver drains all replicas up to each
+    arrival before routing (slower but still O(steps)); stateless routers
+    let the driver drain lazily, one replica at a time.
+    """
+    kind: ClassVar[str] = "base"
+    stateful: ClassVar[bool] = False
+
+    def route(self, rid: int, seq: int, outstanding) -> int:
+        """Replica index for request ``rid``.  ``seq`` is the 0-based
+        arrival ordinal, ``outstanding`` the per-active-replica count of
+        queued + in-flight requests (empty for stateless routers)."""
+        raise NotImplementedError
+
+
+@dataclass(frozen=True)
+class RoundRobin(RouterPolicy):
+    """Arrival k goes to replica k mod N — the stateless baseline."""
+    kind: ClassVar[str] = "round_robin"
+
+    def route(self, rid, seq, outstanding):
+        return seq
+
+
+@dataclass(frozen=True)
+class LeastOutstanding(RouterPolicy):
+    """Join-the-shortest-queue: the replica with the fewest queued +
+    in-flight requests at the arrival instant (ties to the lowest
+    index).  Needs live depths, hence stateful."""
+    kind: ClassVar[str] = "least_outstanding"
+    stateful: ClassVar[bool] = True
+
+    def route(self, rid, seq, outstanding):
+        return min(range(len(outstanding)), key=outstanding.__getitem__)
+
+
+@dataclass(frozen=True)
+class SessionAffinity(RouterPolicy):
+    """Deterministic hash of the request id (Knuth multiplicative), so a
+    session's requests always land on the same replica — the sticky
+    routing KV-cache reuse wants."""
+    kind: ClassVar[str] = "session_affinity"
+
+    def route(self, rid, seq, outstanding):
+        return (rid * 2654435761) >> 12
+
+
+ROUTERS: Dict[str, Type[RouterPolicy]] = {
+    "round_robin": RoundRobin,
+    "least_outstanding": LeastOutstanding,
+    "session_affinity": SessionAffinity,
+}
+
+
+def get_router(name: str, **kwargs) -> RouterPolicy:
+    """Router by name (``round_robin`` | ``least_outstanding`` |
+    ``session_affinity``)."""
+    try:
+        cls = ROUTERS[name]
+    except KeyError:
+        raise KeyError(f"unknown router policy {name!r}; "
+                       f"one of {sorted(ROUTERS)}") from None
+    return cls(**kwargs)
+
+
+@dataclass(frozen=True)
+class QueueDepthAutoscaler:
+    """Queue-depth autoscaling: at each arrival, compare the mean
+    outstanding requests per active replica against the scale-up /
+    scale-down thresholds, honoring a cooldown between actions.  The
+    fleet driver spawns a fresh replica on +1 and retires (drains, no new
+    routes) the emptiest replica on -1."""
+    min_replicas: int = 1
+    max_replicas: int = 8
+    scale_up_depth: float = 16.0
+    scale_down_depth: float = 2.0
+    cooldown_s: float = 1.0
+
+    def decide(self, n_active: int, mean_depth: float, t_s: float,
+               last_change_s: float) -> int:
+        """-1 / 0 / +1 replica delta at arrival time ``t_s``."""
+        if t_s - last_change_s < self.cooldown_s:
+            return 0
+        if mean_depth >= self.scale_up_depth \
+                and n_active < self.max_replicas:
+            return 1
+        if mean_depth <= self.scale_down_depth \
+                and n_active > self.min_replicas:
+            return -1
+        return 0

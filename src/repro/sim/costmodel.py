@@ -56,8 +56,8 @@ from repro.sim import hw
 from repro.sim.hw import PARAM_FIELDS
 
 __all__ = ["CHAIN_INTERFACES", "ChainParams", "CostModel", "OpArrays",
-           "Unsupported", "chain_terms", "interleave", "op_arrays",
-           "relaxation_err"]
+           "Unsupported", "chain_params_for", "chain_terms", "interleave",
+           "op_arrays", "relaxation_err"]
 
 # interfaces the analytic term functions mirror exactly; a custom
 # interface registered into engine.INTERFACES falls back to the event loop
@@ -258,6 +258,21 @@ def chain_terms(a: OpArrays, p: ChainParams, xp=np) -> ChainTerms:
     return ChainTerms(comp=comp, full=full, expo=expo, xfer=xfer, xe=xe,
                       hc=hc, cdur=cdur, factor=factor, has_h=has_h,
                       has_x=has_x, has_c=has_c)
+
+
+def chain_params_for(config, device_class: str = "accel") -> ChainParams:
+    """The scalar :class:`ChainParams` point at which
+    ``engine.chain_op_costs`` prices ops of ``device_class`` under
+    ``config`` — device terms from the class's resolved reference device,
+    host/ICI terms from the flat config.  Raises :class:`Unsupported` for
+    interfaces outside :data:`CHAIN_INTERFACES` (custom interfaces keep
+    going through the event-loop models)."""
+    from repro.sim import engine as _engine
+    eff, ports = _engine._class_params(config, device_class)
+    if eff.interface not in CHAIN_INTERFACES:
+        raise Unsupported(f"interface {eff.interface!r} has no analytic "
+                          "chain model")
+    return ChainParams.from_engine(config, eff, ports)
 
 
 def interleave(t: ChainTerms, xp=np):

@@ -393,6 +393,34 @@ def from_serving_step(cfg, *, prefill_lens: Sequence[int] = (),
                          "n_decode": len(decode_positions)})
 
 
+def serving_step_signature(prefill_lens: Sequence[int],
+                           decode_positions: Sequence[int]) -> Tuple:
+    """The cost-sufficient signature of one serving step.
+
+    ``from_serving_step`` reads ``decode_positions`` only through ``len()``
+    (the decode batch size) and ``sum()`` (the KV position total, an exact
+    integer sum), while the prefill ops' causal-attention term is a float
+    sum over the *individual* prompt lengths — so ``(tuple(prefill_lens),
+    len(decode_positions), sum(decode_positions))`` determines every cost
+    field of the step's ops bit-for-bit.  The step index only names ops;
+    it never changes a cost.  ``serving.StepCostTable`` memoizes step
+    pricing on this key, and this function is the single place that
+    encodes the coupling — extend it if ``from_serving_step`` ever reads
+    more structure out of ``decode_positions``.
+    """
+    return (tuple(prefill_lens), len(decode_positions),
+            int(sum(decode_positions)))
+
+
+def positions_for_signature(n_decode: int, pos_sum: int) -> Tuple[int, ...]:
+    """A canonical ``decode_positions`` tuple realizing a signature's
+    ``(n_decode, pos_sum)`` — any tuple with that length and sum lowers to
+    bit-identical decode-op costs (see ``serving_step_signature``)."""
+    if n_decode <= 0:
+        return ()
+    return (int(pos_sum) - (n_decode - 1),) + (1,) * (n_decode - 1)
+
+
 # ---------------------------------------------------------------------------
 # lowering 2d: one training step -> fwd/bwd/reduce/update chain
 

@@ -45,8 +45,9 @@ from repro.sim.hw import PARAM_FIELDS, SoCTopology
 from repro.sim.ir import Program
 
 __all__ = ["sweep", "batched", "optimize", "topology_sweep",
-           "training_sweep", "lower_graph", "lower_hlo", "as_records",
-           "as_training_records", "BatchedSweep", "OptimizeResult"]
+           "training_sweep", "fleet_sweep", "lower_graph", "lower_hlo",
+           "as_records", "as_training_records", "BatchedSweep",
+           "OptimizeResult"]
 
 _CACHE_MAX = 64
 
@@ -498,6 +499,47 @@ def training_sweep(cfg, *, schedules: Sequence[str] = ("gpipe", "1f1b"),
                     config=base, **kw)
                 res.meta.update({"model": getattr(cfg, "name", "model")})
                 out.append(res)
+    return out
+
+
+def fleet_sweep(cfg, *, routers: Sequence[str] = ("round_robin",
+                                                  "least_outstanding",
+                                                  "session_affinity"),
+                replica_counts: Sequence[int] = (1, 2, 4),
+                policy=None, n_requests: int = 2000,
+                rate_rps: float = 200.0, trace_kind: str = "diurnal",
+                seed: int = 0, config: Optional[EngineConfig] = None,
+                bytes_per_param: float = 2.0, **trace_kw) -> List:
+    """Run the router x replica-count fleet grid: one
+    ``repro.sim.serving.FleetResult`` per (router, n_replicas) cell, in
+    that nesting order.  Every cell replays the SAME seeded trace (one
+    generator call, shared across cells) through ONE shared
+    ``StepCostTable``, so the comparison isolates the routing/replica
+    choice and the whole grid prices steps out of a single memo."""
+    from repro.serve.policy import get_policy
+    from repro.sim.serving import (TRACE_GENERATORS, StepCostTable,
+                                   simulate_fleet)
+    base = config if config is not None else EngineConfig()
+    if policy is None:
+        policy = get_policy("continuous", max_batch=8)
+    trace = TRACE_GENERATORS[trace_kind](
+        n_requests, rate_rps, seed=seed, arrays=True, **trace_kw) \
+        if trace_kind == "diurnal" else \
+        TRACE_GENERATORS[trace_kind](n_requests, rate_rps, seed=seed,
+                                     **trace_kw)
+    table = StepCostTable(cfg, base, bytes_per_param=bytes_per_param)
+    out = []
+    for router in routers:
+        for n in replica_counts:
+            res = simulate_fleet(cfg, trace, policy, base,
+                                 n_replicas=n, router=router,
+                                 bytes_per_param=bytes_per_param,
+                                 table=table)
+            res.meta.update({"model": getattr(cfg, "name", "model"),
+                             "router": router, "n_replicas": n,
+                             "rate_rps": rate_rps,
+                             "trace_kind": trace_kind, "seed": seed})
+            out.append(res)
     return out
 
 

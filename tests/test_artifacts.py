@@ -19,6 +19,7 @@ BENCH_SERVING = Path("BENCH_serving.json")
 BENCH_SOC = Path("BENCH_soc.json")
 BENCH_TRAINING = Path("BENCH_training.json")
 BENCH_DSE = Path("BENCH_dse.json")
+BENCH_FLEET = Path("BENCH_fleet.json")
 
 
 def _finite_pos(x) -> bool:
@@ -192,6 +193,53 @@ def test_bench_dse_schema():
     # optimize lands within 2% of the exact grid best (acceptance gate)
     assert abs(ps["within_frac"]) <= 0.02
     assert ps["knee_ports"] in ps["grid_ports"]
+    assert all(_finite_pos(v) for v in b["budget_s"].values())
+
+
+@pytest.mark.skipif(not BENCH_FLEET.exists(), reason="bench not present")
+def test_bench_fleet_schema():
+    b = json.loads(BENCH_FLEET.read_text())
+    assert set(b) >= {"headline", "headline_quick", "speedup",
+                      "bit_identity", "conservation", "fleet_grid",
+                      "autoscale", "budget_s", "recorded", "note"}
+    hl = b["headline"]
+    assert hl["n_requests"] >= 1_000_000
+    assert _finite_pos(hl["wall_s"]) and hl["wall_s"] <= 20.0
+    # the recorded headline claim: >= 50k simulated requests/s
+    assert hl["replay_rate_rps"] >= 50_000.0
+    assert hl["replay_rate_rps"] == pytest.approx(
+        hl["n_requests"] / hl["wall_s"], rel=0.05)
+    assert 0.0 < hl["memo_hit_rate"] <= 1.0
+    assert 0.0 <= hl["occupancy"] <= 1.0
+    assert 0.0 <= hl["slo_attainment"] <= 1.0
+    assert hl["n_steps"] > 0 and hl["n_replicas"] >= 1
+    sp = b["speedup"]
+    # memoization must actually pay, and must not change the arithmetic
+    assert sp["speedup"] >= 10.0
+    assert sp["speedup"] == pytest.approx(
+        sp["unmemoized_s"] / sp["replay_s"], rel=0.05)
+    assert sp["bit_identical"] is True
+    assert b["bit_identity"]["bit_identical"] is True
+    assert b["conservation"]["all_served_once"] is True
+    for rec in b["fleet_grid"]:
+        assert rec["router"] in ("round_robin", "least_outstanding",
+                                 "session_affinity")
+        assert rec["n_replicas"] >= 1
+        assert 0.0 <= rec["slo_attainment"] <= 1.0
+        assert _finite_pos(rec["throughput_req_s"])
+        assert _finite_pos(rec["cost_per_token_j"])
+    # more replicas never hurt SLO attainment on the shared trace
+    by_router = {}
+    for rec in b["fleet_grid"]:
+        by_router.setdefault(rec["router"], []).append(
+            (rec["n_replicas"], rec["slo_attainment"]))
+    for router, cells in by_router.items():
+        cells.sort()
+        slos = [s for _, s in cells]
+        assert slos == sorted(slos), (router, slos)
+    asc = b["autoscale"]
+    assert asc["n_scale_events"] >= 1
+    assert asc["peak_replicas"] >= 2          # the burst forced a scale-up
     assert all(_finite_pos(v) for v in b["budget_s"].values())
 
 

@@ -1,0 +1,414 @@
+"""Fleet-scale serving replay: the memoized step-cost table, the lite
+aggregate-counter scheduler, the multi-replica router/autoscaler layer,
+and the streaming trace I/O — all held to the PR-3 co-simulation's
+arithmetic bit for bit."""
+import math
+
+import pytest
+
+from repro.core.config import ModelConfig
+from repro.serve.policy import (QueueDepthAutoscaler, get_policy,
+                                get_router)
+from repro.sim import engine, ir
+from repro.sim.engine import EngineConfig
+from repro.sim.report import latency_stats, latency_stats_array
+from repro.sim.serving import (Request, StepCostTable, TraceArrays,
+                               TRACE_GENERATORS, as_fleet_records,
+                               as_serving_records, bursty_trace,
+                               diurnal_trace, iter_trace, load_trace,
+                               poisson_trace, replay_serving, save_trace,
+                               simulate_fleet, simulate_serving)
+
+TOY = ModelConfig(name="toy", family="dense", n_layers=2, d_model=8,
+                  n_heads=2, n_kv_heads=2, d_ff=16, vocab=32, head_dim=4)
+
+POLICY_NAMES = ("static", "dynamic", "continuous")
+CONFIGS = [
+    EngineConfig(),
+    EngineConfig(interface="hbm", hbm_ports=0.5, host_dispatch_s=5e-6,
+                 datapath_scale=1.5),
+    EngineConfig(interface="dma", host_threads=2),
+]
+
+
+def _policies(max_batch=4):
+    return [get_policy(n, max_batch=max_batch) for n in POLICY_NAMES]
+
+
+# ---------------------------------------------------------------------------
+# the memo: StepCostTable == engine.chain_op_costs, bit for bit
+
+
+@pytest.mark.parametrize("config", CONFIGS)
+def test_step_cost_table_matches_chain_op_costs(config):
+    """Every (prefill tuple, decode composition) the table prices must
+    reproduce the engine's per-op chain terms exactly — including on
+    interfaces (dma) that take the un-fast fallback path."""
+    import random
+    rng = random.Random(11)
+    table = StepCostTable(TOY, config)
+    for trial in range(50):
+        pf = tuple(rng.randint(1, 40)
+                   for _ in range(rng.randint(0, 4)))
+        dpos = tuple(rng.randint(1, 200)
+                     for _ in range(rng.randint(0, 6)))
+        if not pf and not dpos:
+            continue
+        prog = ir.from_serving_step(TOY, step=trial, prefill_lens=pf,
+                                    decode_positions=dpos)
+        exact = [engine.chain_op_costs(op, config) for op in prog.ops]
+        memo = table.step_entries(pf, len(dpos), sum(dpos))
+        assert len(memo) == len(exact)
+        for entry, terms in zip(memo, exact):
+            assert entry[:4] == terms            # (host, xfer, comp, coll)
+        assert table.step_entries(pf, len(dpos), sum(dpos)) == memo
+    assert table.hits > 0 and 0.0 < table.hit_rate < 1.0
+
+
+def test_step_cost_table_signature_sufficiency():
+    """The decode entry depends on positions only through (count, sum) —
+    the exact claim ``ir.serving_step_signature`` documents."""
+    config = EngineConfig()
+    table = StepCostTable(TOY, config)
+    a = table.step_entries((), 3, 60)
+    for dpos in ((20, 20, 20), (1, 1, 58), (50, 9, 1)):
+        prog = ir.from_serving_step(TOY, step=0, prefill_lens=(),
+                                    decode_positions=dpos)
+        exact = [engine.chain_op_costs(op, config) for op in prog.ops]
+        assert [e[:4] for e in a] == exact
+
+
+def test_step_cost_table_mismatch_rejected():
+    table = StepCostTable(TOY, EngineConfig())
+    other = EngineConfig(hbm_ports=2.0)
+    assert not table.matches(TOY, other, 2.0)
+    with pytest.raises(ValueError, match="different"):
+        replay_serving(TOY, poisson_trace(4, 10.0), _policies()[0],
+                       other, table=table)
+
+
+def test_signature_helpers_round_trip():
+    sig = ir.serving_step_signature((3, 5), (7, 9, 11))
+    assert sig == ((3, 5), 3, 27)
+    pos = ir.positions_for_signature(3, 27)
+    assert len(pos) == 3 and sum(pos) == 27 and min(pos) >= 1
+    assert ir.positions_for_signature(0, 0) == ()
+
+
+# ---------------------------------------------------------------------------
+# the lite replay: bit-identical to the full co-simulation
+
+
+@pytest.mark.parametrize("config", CONFIGS[:2])
+@pytest.mark.parametrize("kind", ["poisson", "bursty"])
+def test_replay_bit_identical_to_simulate(kind, config):
+    """replay_serving == simulate_serving on wall/busy clocks, step
+    records, per-request times, and every stats() field — all policies,
+    both trace shapes."""
+    gen = poisson_trace if kind == "poisson" else bursty_trace
+    trace = gen(80, 60.0, seed=4)
+    for policy in _policies():
+        a = simulate_serving(TOY, trace, policy, config)
+        b = replay_serving(TOY, trace, policy, config,
+                           record_steps=True)
+        assert b.busy_s == a.busy_s
+        assert b.makespan_s == a.makespan_s
+        assert b.n_steps == len(a.steps)
+        assert b.steps == a.steps
+        am = {m.rid: (m.first_token_s, m.finish_s) for m in a.requests}
+        bm = {m.rid: (m.first_token_s, m.finish_s) for m in b.requests}
+        assert am == bm
+        assert b.stats() == a.stats()
+
+
+def test_simulate_serving_memoize_toggle_identical():
+    """memoize=True changes the cost of simulate_serving, not a single
+    bit of its result."""
+    trace = bursty_trace(48, 90.0, seed=2)
+    for policy in _policies():
+        on = simulate_serving(TOY, trace, policy, memoize=True)
+        off = simulate_serving(TOY, trace, policy, memoize=False)
+        assert on.busy_s == off.busy_s
+        assert on.makespan_s == off.makespan_s
+        assert on.stats() == off.stats()
+
+
+def test_replay_energy_matches_engine():
+    """The replay's energy roll-up equals the engine's on the same trace
+    (same terms, possibly different float summation order)."""
+    trace = poisson_trace(48, 60.0, seed=2)
+    policy = get_policy("continuous", max_batch=4)
+    a = simulate_serving(TOY, trace, policy)
+    b = replay_serving(TOY, trace, policy)
+    ea, eb = a.engine.energy, b.energy()
+    assert set(eb) == set(ea)
+    for k in ea:
+        assert eb[k] == pytest.approx(ea[k], rel=1e-9, abs=1e-18)
+
+
+def test_replay_accepts_sorted_stream_and_rejects_unsorted():
+    trace = poisson_trace(24, 40.0, seed=6)
+    policy = get_policy("continuous", max_batch=4)
+    a = replay_serving(TOY, trace, policy)
+    b = replay_serving(TOY, iter(trace), policy)
+    assert a.makespan_s == b.makespan_s
+    bad = [Request(0, 1.0, 4, 2), Request(1, 0.5, 4, 2)]
+    with pytest.raises(ValueError, match="sorted"):
+        replay_serving(TOY, iter(bad), policy)
+    with pytest.raises(ValueError, match="duplicate rid"):
+        replay_serving(TOY, [Request(3, 0.0, 4, 2),
+                             Request(3, 0.5, 4, 2)], policy)
+
+
+# ---------------------------------------------------------------------------
+# the fleet: routers conserve requests, N=1 degenerates to replay
+
+
+def test_fleet_single_replica_is_replay():
+    trace = poisson_trace(60, 80.0, seed=9)
+    for policy in _policies():
+        b = replay_serving(TOY, trace, policy)
+        f = simulate_fleet(TOY, trace, policy, n_replicas=1)
+        assert f.makespan_s == b.makespan_s
+        assert f.busy_s == b.busy_s
+        assert list(f.first_token_s) == list(b.first_token_s)
+        assert list(f.finish_s) == list(b.finish_s)
+
+
+@pytest.mark.parametrize("router", ["round_robin", "least_outstanding",
+                                    "session_affinity"])
+def test_fleet_router_conserves_requests(router):
+    """Every request is routed to exactly one replica and served exactly
+    once: finish times all finite, per-replica rid sets partition the
+    trace."""
+    import numpy as np
+    trace = bursty_trace(200, 150.0, seed=1)
+    policy = get_policy("continuous", max_batch=4)
+    f = simulate_fleet(TOY, trace, policy, n_replicas=3, router=router)
+    assert np.isfinite(np.asarray(f.finish_s)).all()
+    assert np.isfinite(np.asarray(f.first_token_s)).all()
+    seen = sorted(int(r) for rep in f.replicas for r in rep.rid)
+    assert seen == sorted(r.rid for r in trace)
+    ro = np.asarray(f.replica_of)
+    for rep in f.replicas:
+        idx = rep.meta["replica"]
+        assert int(np.count_nonzero(ro == idx)) == len(rep.rid)
+    # per-request ordering invariants hold globally
+    assert (np.asarray(f.first_token_s)
+            >= np.asarray(f.arrival_s)).all()
+    assert (np.asarray(f.finish_s)
+            >= np.asarray(f.first_token_s)).all()
+
+
+def test_fleet_round_robin_assignment():
+    trace = poisson_trace(12, 50.0, seed=0)
+    policy = get_policy("continuous", max_batch=4)
+    f = simulate_fleet(TOY, trace, policy, n_replicas=3,
+                       router="round_robin")
+    assert list(f.replica_of) == [i % 3 for i in range(12)]
+
+
+def test_fleet_session_affinity_is_sticky():
+    """The affinity hash depends only on rid, so a session's requests
+    always land on the same replica regardless of arrival order."""
+    router = get_router("session_affinity")
+    a = router.route(42, 0, ()) % 4
+    assert all(router.route(42, s, ()) % 4 == a for s in range(5))
+    assert len({router.route(rid, 0, ()) % 4
+                for rid in range(64)}) > 1       # and it does spread
+
+
+def test_fleet_stats_and_records():
+    trace = diurnal_trace(300, 400.0, seed=7)
+    policy = get_policy("continuous", max_batch=4)
+    f = simulate_fleet(TOY, trace, policy, n_replicas=2)
+    s = f.stats()
+    assert 0.0 <= s["slo_attainment"] <= 1.0
+    assert s["n_requests"] == 300 and s["n_replicas"] == 2
+    assert s["cost_per_token_j"] > 0.0
+    assert math.isfinite(s["makespan_s"]) and s["makespan_s"] > 0.0
+    # generous SLO -> everyone attains; impossible SLO -> no one does
+    assert f.slo_attainment(ttft_slo_s=1e9, tpot_slo_s=1e9) == 1.0
+    assert f.slo_attainment(ttft_slo_s=-1.0, tpot_slo_s=1e-12) == 0.0
+    recs = as_fleet_records([f])
+    assert len(recs) == 1 and recs[0]["router"] == "round_robin"
+    per = as_fleet_records([f], per_replica=True)
+    assert len(per) == 2
+    assert all("trace_kind" in r and "rate_rps" in r for r in per)
+
+
+def test_autoscaler_bounds_cooldown_and_events():
+    scaler = QueueDepthAutoscaler(min_replicas=1, max_replicas=3,
+                                  scale_up_depth=4.0,
+                                  scale_down_depth=0.5, cooldown_s=0.1)
+    # pure decision logic
+    assert scaler.decide(1, 10.0, 1.0, 0.99) == 0      # inside cooldown
+    assert scaler.decide(1, 10.0, 1.0, 0.0) == 1
+    assert scaler.decide(3, 10.0, 1.0, 0.0) == 0       # at max
+    assert scaler.decide(2, 0.1, 1.0, 0.0) == -1
+    assert scaler.decide(1, 0.1, 1.0, 0.0) == 0        # at min
+    # end to end: a bursty overload must trigger scale-ups, stay in
+    # bounds, and still serve every request exactly once
+    import numpy as np
+    trace = bursty_trace(400, 300.0, seed=8)
+    policy = get_policy("continuous", max_batch=2)
+    f = simulate_fleet(TOY, trace, policy, n_replicas=1,
+                       router="least_outstanding", autoscaler=scaler)
+    assert np.isfinite(np.asarray(f.finish_s)).all()
+    assert sum(len(r.rid) for r in f.replicas) == 400
+    for e in f.scale_events:
+        assert 1 <= e.n_replicas <= 3
+        assert e.action in ("up", "down")
+    ts = [e.t_s for e in f.scale_events]
+    assert all(b - a >= scaler.cooldown_s - 1e-12
+               for a, b in zip(ts, ts[1:]))
+
+
+# ---------------------------------------------------------------------------
+# traces: diurnal generator, columnar arrays, streaming I/O
+
+
+def test_diurnal_trace_properties():
+    tr = diurnal_trace(64, 100.0, seed=5)
+    assert len(tr) == 64
+    assert all(isinstance(r, Request) for r in tr)
+    assert all(a.arrival_s <= b.arrival_s for a, b in zip(tr, tr[1:]))
+    assert all(r.arrival_s >= 0.0 and r.prompt_len >= 1
+               and r.output_len >= 1 for r in tr)
+    assert tr == diurnal_trace(64, 100.0, seed=5)        # deterministic
+    assert tr != diurnal_trace(64, 100.0, seed=6)
+    assert TRACE_GENERATORS["diurnal"] is diurnal_trace
+    with pytest.raises(ValueError, match="amplitude"):
+        diurnal_trace(8, 10.0, amplitude=1.5)
+
+
+def test_diurnal_arrays_agree_with_list():
+    ta = diurnal_trace(50, 200.0, seed=3, arrays=True)
+    tl = diurnal_trace(50, 200.0, seed=3)
+    assert isinstance(ta, TraceArrays) and len(ta) == 50
+    assert list(ta) == tl                        # same Requests, same bits
+    policy = get_policy("continuous", max_batch=4)
+    a = replay_serving(TOY, ta, policy)
+    b = replay_serving(TOY, tl, policy)
+    assert a.makespan_s == b.makespan_s and a.busy_s == b.busy_s
+
+
+def test_diurnal_rate_modulation():
+    """The sinusoidal intensity rate*(1 + A*sin(2*pi*t/P)) peaks in the
+    first half-period, so at amplitude 0.9 the first half of the day
+    holds well over half the requests."""
+    import numpy as np
+    tr = diurnal_trace(4000, 100.0, period_s=40.0, amplitude=0.9,
+                       seed=0, arrays=True)
+    t = np.asarray(tr.arrival_s)
+    first_half = (t < 20.0).mean()
+    assert first_half > 0.65
+    # flat amplitude=0 degenerates to an ordinary Poisson process
+    flat = diurnal_trace(4000, 100.0, period_s=40.0, amplitude=0.0,
+                         seed=0, arrays=True)
+    tf = np.asarray(flat.arrival_s)
+    assert abs((tf < 20.0).mean() - 0.5) < 0.1
+
+
+def test_trace_gzip_round_trip_and_lazy_iter(tmp_path):
+    trace = diurnal_trace(40, 80.0, seed=1)
+    p = tmp_path / "trace.jsonl.gz"
+    save_trace(p, trace)
+    assert load_trace(p) == trace                # bit-identical floats
+    it = iter_trace(p)
+    assert next(it) == trace[0]                  # lazy: partial consume OK
+    assert list(it) == trace[1:]
+    # a generator (no len, no indexing) feeds save_trace and replay
+    p2 = tmp_path / "stream.jsonl.gz"
+    save_trace(p2, (r for r in trace))
+    policy = get_policy("continuous", max_batch=4)
+    a = replay_serving(TOY, iter_trace(p2), policy)
+    b = replay_serving(TOY, trace, policy)
+    assert a.makespan_s == b.makespan_s
+    assert a.stats() == b.stats()
+
+
+def test_as_serving_records_uniform_columns():
+    """Every record carries rate_rps/trace_kind — sweep cells filled in,
+    ad-hoc runs None — so mixed-provenance tables never KeyError."""
+    trace = poisson_trace(16, 40.0, seed=0)
+    policy = get_policy("continuous", max_batch=4)
+    sim = simulate_serving(TOY, trace, policy)
+    rep = replay_serving(TOY, trace, policy)
+    recs = as_serving_records([sim, rep])
+    keys = set(recs[0])
+    for r in recs:
+        assert set(r) == keys
+        assert "rate_rps" in r and "trace_kind" in r
+    # sim's engine makespan == replay's busy clock, bit for bit
+    assert recs[0]["engine_makespan_s"] == recs[1]["engine_makespan_s"]
+
+
+def test_latency_stats_array_matches_scalar():
+    import random
+    rng = random.Random(3)
+    for n in (0, 1, 2, 7, 100):
+        xs = [rng.uniform(0.0, 5.0) for _ in range(n)]
+        assert latency_stats_array(xs) == latency_stats(xs)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis properties (skipped automatically when hypothesis is absent)
+
+
+from _hyp import given, settings, st  # noqa: E402
+
+
+@settings(max_examples=30, deadline=None)
+@given(pf=st.lists(st.integers(1, 64), max_size=5),
+       dpos=st.lists(st.integers(1, 300), max_size=8))
+def test_memo_matches_engine_property(pf, dpos):
+    """StepCostTable == chain_op_costs for ANY step composition."""
+    if not pf and not dpos:
+        return
+    config = EngineConfig()
+    table = StepCostTable(TOY, config)
+    prog = ir.from_serving_step(TOY, step=0, prefill_lens=tuple(pf),
+                                decode_positions=tuple(dpos))
+    exact = [engine.chain_op_costs(op, config) for op in prog.ops]
+    memo = table.step_entries(tuple(pf), len(dpos), sum(dpos))
+    assert [e[:4] for e in memo] == exact
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 60), rate=st.floats(1.0, 400.0),
+       seed=st.integers(0, 2**16), n_replicas=st.integers(1, 4),
+       router=st.sampled_from(["round_robin", "least_outstanding",
+                               "session_affinity"]))
+def test_fleet_conservation_property(n, rate, seed, n_replicas, router):
+    """For ANY trace and fleet shape, the router neither loses nor
+    duplicates a request."""
+    import numpy as np
+    trace = poisson_trace(n, rate, seed=seed)
+    policy = get_policy("continuous", max_batch=4)
+    f = simulate_fleet(TOY, trace, policy, n_replicas=n_replicas,
+                       router=router)
+    assert np.isfinite(np.asarray(f.finish_s)).all()
+    assert sorted(int(r) for rep in f.replicas for r in rep.rid) \
+        == list(range(n))
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 48), rate=st.floats(1.0, 300.0),
+       seed=st.integers(0, 2**16),
+       pname=st.sampled_from(list(POLICY_NAMES)))
+def test_replay_identity_property(n, rate, seed, pname):
+    """For ANY poisson trace and policy, the lite replay reproduces the
+    full co-simulation bit for bit."""
+    trace = poisson_trace(n, rate, seed=seed)
+    policy = get_policy(pname, max_batch=4)
+    a = simulate_serving(TOY, trace, policy)
+    b = replay_serving(TOY, trace, policy)
+    assert (a.busy_s, a.makespan_s) == (b.busy_s, b.makespan_s)
+    assert a.stats() == b.stats()
+
+
+@settings(max_examples=30, deadline=None)
+@given(xs=st.lists(st.floats(0.0, 1e4), max_size=64))
+def test_latency_stats_array_property(xs):
+    assert latency_stats_array(xs) == latency_stats(xs)

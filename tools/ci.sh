@@ -58,4 +58,10 @@ python -m benchmarks.bench_dse --quick
 # GPipe on homogeneous uncontended stages; ideal bubble == (p-1)/(m+p-1))
 python -m benchmarks.bench_training --quick
 
+# fleet smoke: the memoized 100k-request replay within 2x of its
+# BENCH_fleet.json budget, the replay rate at >= half the recorded 1M
+# headline, and the bit-identity (replay == full co-simulation) +
+# router-conservation probes (recorded speedup floor >= 10x)
+python -m benchmarks.bench_fleet --quick
+
 echo "CI OK"
