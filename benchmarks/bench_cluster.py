@@ -1,0 +1,300 @@
+"""Cluster-scale training over the hierarchical fabric: DP x TP x PP.
+
+Four studies, all feeding ``BENCH_cluster.json`` at the repo root:
+
+* **cluster_grid** — gemma-2b and deepseek-v2-lite trained across
+  8 / 64 / 512 accelerators, every power-of-two (dp, pp, tp) placement
+  (``sweep.placements_for``), ring / tree / hierarchical gradient
+  all-reduce — one ``as_cluster_records`` row per cell with whole-cluster
+  tokens/s, per-step energy and TCO (``hw.tco_per_step``), plus a
+  ``speedup`` column against the model's best smallest-cluster cell.
+  The "cheapest N-accelerator config under a step-time target" question
+  is answered inline (min TCO subject to ``step_time_s <= target``).
+* **bounds** — the engine's makespan on an uncontended lowered collective
+  must equal the closed forms: ring all-reduce
+  ``2 (p-1)/p B/bw + 2 (p-1) lat``, tree ``2 ceil(log2 p) (lat + B/bw)``,
+  and the hierarchical per-tier composition (rel 1e-12).
+* **hier_vs_ring** — hierarchical <= ring for every node-spanning
+  all-reduce on the multi-tier cluster fabric (the point of the algo).
+* **single_tier_identity** — a single-tier fabric must be invisible:
+  the no-collective training step is bit-identical to the flat config,
+  and the dp ring's collective lane time equals the pre-refactor ring
+  wire term ``2 (d-1)/d grad_bytes / ici_bw`` (rel 1e-12).
+
+``--quick`` (the ``tools/ci.sh`` perf smoke) runs a reduced grid against
+its recorded budget (2x gate) plus all three correctness probes; the
+512-accelerator sweep runs only in full mode.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import pathlib
+import sys
+import time
+
+from repro.configs.deepseek_v2_lite_16b import FULL as DEEPSEEK
+from repro.configs.gemma_2b import FULL as GEMMA_2B
+from repro.sim import hw, ir, training
+from repro.sim.engine import EngineConfig
+from repro.sim.report import row
+from repro.sim.sweep import as_cluster_records, cluster_sweep
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+BENCH_JSON = ROOT / "BENCH_cluster.json"
+
+MODELS = (GEMMA_2B, DEEPSEEK)
+ALGOS = ("ring", "tree", "hierarchical")
+FULL_GRID = (8, 64, 512)
+QUICK_GRID = (8, 32)
+STEP_TARGET_S = 1.0            # the headline "train under target" question
+REL = 1e-12
+
+
+def _rel(a: float, b: float) -> float:
+    return abs(a - b) / max(abs(a), abs(b), 1e-300)
+
+
+def _grid(full: bool):
+    """The placement grid rows for every model, with speedup columns."""
+    grid = FULL_GRID if full else QUICK_GRID
+    rows = []
+    for cfg in (MODELS if full else MODELS[:1]):
+        results = cluster_sweep(cfg, n_accel_grid=grid, algos=ALGOS,
+                                seq_len=512, global_batch=32)
+        recs = as_cluster_records(results)
+        n_min = min(r["n_accel"] for r in recs)
+        base = max(r["cluster_tokens_per_s"] for r in recs
+                   if r["n_accel"] == n_min)
+        for r in recs:
+            r["speedup"] = r["cluster_tokens_per_s"] / base
+        rows.extend(recs)
+    return rows
+
+
+def _cheapest(rows, model: str, target_s: float):
+    """min TCO/step subject to the step-time target (None if infeasible)."""
+    feas = [r for r in rows
+            if r["model"] == model and r["step_time_s"] <= target_s]
+    if not feas:
+        return None
+    best = min(feas, key=lambda r: r["tco_usd_per_step"])
+    return {k: best[k] for k in
+            ("model", "n_accel", "dp_degree", "pp_degree", "tp_degree",
+             "collective_algo", "step_time_s", "tco_usd_per_step",
+             "cluster_tokens_per_s")}
+
+
+def _bounds():
+    """Engine makespan == closed form on uncontended lowered collectives."""
+    cfg = EngineConfig()
+    checks = []
+    flat = hw.Fabric.single_tier(16)
+    B = 64e6
+    lat, bw = hw.resolve_tier_params(cfg, flat.tiers[0].name)
+    for p in (2, 5, 16):
+        g = tuple(range(p))
+        t = ir.collective_time("all_reduce", B, g, flat, config=cfg,
+                               algo="ring")
+        closed = 2.0 * (p - 1) / p * B / bw + 2.0 * (p - 1) * lat
+        checks.append(("ring_allreduce", p, _rel(t, closed)))
+        tt = ir.collective_time("all_reduce", B, g, flat, config=cfg,
+                                algo="tree")
+        depth = max(1, (p - 1).bit_length())
+        closed_t = 2.0 * depth * (lat + B / bw)
+        checks.append(("tree_allreduce", p, _rel(tt, closed_t)))
+    fab = hw.Fabric(tiers=(hw.FabricTier("node", 4),
+                           hw.FabricTier("inter", 4)))
+    lat_n, bw_n = hw.resolve_tier_params(cfg, fab.tiers[0].name)
+    lat_i, bw_i = hw.resolve_tier_params(cfg, fab.tiers[1].name)
+    th = ir.collective_time("all_reduce", B, tuple(range(16)), fab,
+                            config=cfg, algo="hierarchical")
+    k, n = 4, 4
+    rs = (k - 1) * (lat_n + (B / k) / bw_n)
+    ar = 2.0 * (n - 1) * (lat_i + (B / (k * n)) / bw_i)
+    checks.append(("hier_allreduce", 16, _rel(th, 2.0 * rs + ar)))
+    worst = max(c[2] for c in checks)
+    return {"checks": [{"algo": a, "p": p, "rel_err": e}
+                       for a, p, e in checks],
+            "worst_rel_err": worst, "exact": bool(worst <= REL)}
+
+
+def _hier_vs_ring():
+    """hierarchical <= ring on every node-spanning group of the cluster."""
+    cfg = EngineConfig()
+    fab = hw.Fabric.cluster(64)
+    cells = []
+    for p in (8, 16, 32, 64):
+        g = tuple(range(p))
+        r = ir.collective_time("all_reduce", 128e6, g, fab, config=cfg,
+                               algo="ring")
+        h = ir.collective_time("all_reduce", 128e6, g, fab, config=cfg,
+                               algo="hierarchical")
+        cells.append({"p": p, "ring_s": r, "hier_s": h,
+                      "hier_le_ring": bool(h <= r * (1.0 + REL))})
+    return {"fabric": fab.describe(), "bytes": 128e6, "cells": cells,
+            "all_hold": bool(all(c["hier_le_ring"] for c in cells))}
+
+
+def _single_tier_identity():
+    """Single-tier fabric invisible; dp ring == pre-refactor wire term."""
+    cfg = EngineConfig()
+    flat = hw.Fabric.single_tier(8)
+    a = training.simulate_training(GEMMA_2B, global_batch=8)
+    b = training.simulate_training(GEMMA_2B, global_batch=8, fabric=flat)
+    no_dp_identical = a.step_time_s == b.step_time_s
+
+    d = 4
+    r = training.simulate_training(GEMMA_2B, global_batch=8, dp_degree=d,
+                                   fabric=flat)
+    legacy = ir.from_training_step(GEMMA_2B, seq_len=512, batch=8,
+                                   dp_degree=d)
+    wire = next(op.wire_bytes for op in legacy.ops
+                if op.name == "train/reduce")
+    expect = wire / cfg.ici_bw      # 2 (d-1)/d grad_bytes / ici_bw
+    err = _rel(r.stats()["collective_s"], expect)
+    return {"no_dp_bit_identical": bool(no_dp_identical),
+            "dp_ring_collective_s": r.stats()["collective_s"],
+            "legacy_ring_wire_s": expect, "rel_err": err,
+            "dp_ring_matches": bool(err <= REL)}
+
+
+def measure(full: bool):
+    out = {"budget_s": {}}
+    rows = []
+
+    t0 = time.perf_counter()
+    grid = _grid(full)
+    wall = time.perf_counter() - t0
+    key = "cluster_grid" if full else "cluster_grid_quick"
+    out["cluster_grid"] = grid
+    out["budget_s"][key] = round(wall, 3)
+    best = max(grid, key=lambda r: r["cluster_tokens_per_s"])
+    rows.append(row(
+        f"cluster/grid_{len(grid)}cells", wall,
+        f"best={best['model']}@{best['n_accel']} "
+        f"dp{best['dp_degree']}xpp{best['pp_degree']}xtp"
+        f"{best['tp_degree']}/{best['collective_algo']} "
+        f"{best['cluster_tokens_per_s']:,.0f}tok/s"))
+
+    if full:
+        # record the quick-sized budget too, so --quick has a recorded
+        # baseline of its own size to gate against
+        t0 = time.perf_counter()
+        _grid(False)
+        out["budget_s"]["cluster_grid_quick"] = round(
+            time.perf_counter() - t0, 3)
+
+        out["cheapest_under_target"] = {
+            "target_step_s": STEP_TARGET_S,
+            **{m.name: _cheapest(grid, m.name, STEP_TARGET_S)
+               for m in MODELS}}
+        ds = out["cheapest_under_target"].get(DEEPSEEK.name)
+        rows.append(row(
+            "cluster/cheapest_under_target", 0.0,
+            f"deepseek@<= {STEP_TARGET_S}s: "
+            + (f"{ds['n_accel']} accel dp{ds['dp_degree']}"
+               f"xpp{ds['pp_degree']}xtp{ds['tp_degree']} "
+               f"${ds['tco_usd_per_step']:.4f}/step"
+               if ds else "infeasible")))
+
+    bd = _bounds()
+    out["bounds"] = bd
+    rows.append(row(
+        "cluster/closed_form_bounds", 0.0,
+        f"checks={len(bd['checks'])} worst_rel={bd['worst_rel_err']:.2e} "
+        f"exact={bd['exact']}"))
+
+    hr = _hier_vs_ring()
+    out["hier_vs_ring"] = hr
+    rows.append(row(
+        "cluster/hier_vs_ring", 0.0,
+        f"fabric={hr['fabric']} all_hold={hr['all_hold']}"))
+
+    sid = _single_tier_identity()
+    out["single_tier_identity"] = sid
+    rows.append(row(
+        "cluster/single_tier_identity", 0.0,
+        f"no_dp_identical={sid['no_dp_bit_identical']} "
+        f"dp_ring_rel={sid['rel_err']:.2e}"))
+    return out, rows
+
+
+def _check(out):
+    failed = False
+    if not out["bounds"]["exact"]:
+        print(f"cluster smoke: closed-form bound mismatch "
+              f"(worst rel {out['bounds']['worst_rel_err']:.2e})",
+              file=sys.stderr)
+        failed = True
+    if not out["hier_vs_ring"]["all_hold"]:
+        print("cluster smoke: hierarchical all-reduce slower than ring "
+              "on the multi-tier fabric", file=sys.stderr)
+        failed = True
+    sid = out["single_tier_identity"]
+    if not (sid["no_dp_bit_identical"] and sid["dp_ring_matches"]):
+        print("cluster smoke: single-tier fabric is not invisible",
+              file=sys.stderr)
+        failed = True
+    for r in out["cluster_grid"]:
+        if not (math.isfinite(r["step_time_s"]) and r["step_time_s"] > 0):
+            print(f"cluster smoke: non-finite step time in {r['program']}",
+                  file=sys.stderr)
+            failed = True
+            break
+    return failed
+
+
+def run(emit=print):
+    """benchmarks.run driver entry: probes + the quick grid only."""
+    _, rows = measure(full=False)
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced grid vs the BENCH_cluster.json budget "
+                         "(2x gate) + bound / hier<=ring / single-tier "
+                         "identity probes (CI perf smoke)")
+    args = ap.parse_args()
+    out, rows = measure(full=not args.quick)
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']},\"{r['derived']}\"")
+    failed = _check(out)
+    if args.quick:
+        if not BENCH_JSON.exists():
+            print(f"no {BENCH_JSON.name}; run without --quick to record "
+                  "budgets", file=sys.stderr)
+            sys.exit(1)
+        recorded = json.loads(BENCH_JSON.read_text())
+        for name, measured in out["budget_s"].items():
+            budget = recorded.get("budget_s", {}).get(name)
+            if budget is None:
+                continue
+            verdict = "OK" if measured <= 2.0 * budget else "REGRESSION"
+            print(f"perf-smoke {name}: {measured:.2f}s vs budget "
+                  f"{budget:.2f}s (2x gate) {verdict}")
+            failed |= verdict != "OK"
+        if failed:
+            print("bench_cluster smoke failed (perf >2x budget or a "
+                  "collective correctness gate broke)", file=sys.stderr)
+            sys.exit(1)
+        return
+    if failed:
+        sys.exit(1)
+    out["recorded"] = time.strftime("%Y-%m-%d")
+    out["note"] = ("DP x TP x PP placement grid over the hierarchical "
+                   "cluster fabric (8-512 accelerators, ring / tree / "
+                   "hierarchical gradient all-reduce) with cluster "
+                   "tokens/s, per-step energy and TCO, plus closed-form "
+                   "collective bound / hier<=ring / single-tier identity "
+                   "probes; budget_s feeds the tools/ci.sh --quick 2x "
+                   "gate")
+    BENCH_JSON.write_text(json.dumps(out, indent=2) + "\n")
+    print(f"wrote {BENCH_JSON}")
+
+
+if __name__ == "__main__":
+    main()

@@ -28,6 +28,8 @@ MODULES = [
     ("engine_perf", "infra — executor scaling (small/medium/5k-op sweep)"),
     ("dse", "DSE — vectorized analytic cost model + gradient port study"),
     ("fleet", "fleet — memoized multi-replica serving replay at scale"),
+    ("cluster", "cluster — DP x TP x PP over the hierarchical network "
+                "fabric with first-class collectives"),
 ]
 
 

@@ -67,14 +67,28 @@ pipeline-parallel schedules (GPipe / 1F1B) co-simulated over an
 activation/gradient transfers contending on links — reporting step time,
 per-stage utilization and the measured pipeline bubble fraction against
 the analytic ``(p-1)/(m+p-1)`` bound.
+
+Cluster-scale networks go through the ``hw.Fabric`` tier hierarchy
+(intra-chip ici / intra-node / inter-node latency+bandwidth tiers) and
+``ir.from_collective``: ring / tree / hierarchical all-reduce,
+reduce-scatter, all-gather and all-to-all lower to explicit per-hop
+transfers that contend on per-tier fabric lanes in the engine and match
+the closed-form collective bounds exactly on uncontended fabrics
+(``ir.collective_time``).  ``simulate_training`` places DP x TP x PP
+over a fabric, and ``sweep.cluster_sweep`` / ``as_cluster_records``
+price whole placement grids with per-step energy and TCO
+(``hw.tco_per_step``).
 """
 from repro.sim.costmodel import (CostModel, Unsupported,  # noqa: F401
                                  relaxation_err)
 from repro.sim.engine import (EngineConfig, EngineResult, Plan,  # noqa: F401
                               chain_op_costs, prepare, run)
-from repro.sim.hw import (Device, Link, PARAM_FIELDS,  # noqa: F401
-                          SoCTopology, apply_params, params_from_config)
-from repro.sim.ir import (CostedOp, Program, from_decode,  # noqa: F401
+from repro.sim.hw import (Device, Fabric, FabricTier,  # noqa: F401
+                          Link, PARAM_FIELDS, SoCTopology, apply_params,
+                          params_from_config, resolve_tier_params,
+                          tco_per_step)
+from repro.sim.ir import (CostedOp, Program,  # noqa: F401
+                          collective_time, from_collective, from_decode,
                           from_graph, from_hlo, from_serving_step,
                           from_training_step, partition_stages)
 from repro.sim.serving import (Request, ServingResult,  # noqa: F401
@@ -82,8 +96,10 @@ from repro.sim.serving import (Request, ServingResult,  # noqa: F401
                                poisson_trace, save_trace, simulate_serving,
                                serving_sweep, trace_from_records)
 from repro.sim.sweep import (BatchedSweep, OptimizeResult,  # noqa: F401
-                             as_records, as_training_records, batched,
-                             lower_graph, lower_hlo, optimize, sweep,
-                             topology_sweep, training_sweep)
+                             as_cluster_records, as_records,
+                             as_training_records, batched, cluster_sweep,
+                             lower_graph, lower_hlo, optimize,
+                             placements_for, sweep, topology_sweep,
+                             training_sweep)
 from repro.sim.training import (TrainingResult, bubble_bound,  # noqa: F401
                                 schedule_order, simulate_training)

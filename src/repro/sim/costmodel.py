@@ -86,11 +86,26 @@ class OpArrays:
     dur: np.ndarray
     has_tov: np.ndarray     # explicit transfer_s override
     tov: np.ndarray
+    # fabric collectives: per-op tier code (hw.TIER_NAMES index, -1 = not
+    # a fabric hop), latency-hop multiplier, and a factorized lane id for
+    # the per-lane DAG relaxation.  ``any_tier`` gates the tier math so
+    # legacy programs run the exact pre-fabric operations.
+    tcode: np.ndarray = None
+    hops: np.ndarray = None
+    lane_code: np.ndarray = None
+    n_lanes: int = 1
+    any_tier: bool = False
 
 
 def op_arrays(ops: Sequence) -> OpArrays:
     """Extract the per-op cost columns of a sequence of ``CostedOp``s —
     exactly the arrays the chain fast path hoists."""
+    tcodes = [(-1 if op.tier is None else hw.TIER_NAMES.index(op.tier))
+              for op in ops]
+    lanes: Dict[str, int] = {}
+    lane_code = []
+    for op in ops:
+        lane_code.append(lanes.setdefault(op.lane, len(lanes)))
     return OpArrays(
         m=len(ops),
         flops=np.array([op.flops for op in ops], dtype=np.float64),
@@ -106,7 +121,12 @@ def op_arrays(ops: Sequence) -> OpArrays:
         has_tov=np.array([op.transfer_s is not None for op in ops],
                          dtype=bool),
         tov=np.array([op.transfer_s or 0.0 for op in ops],
-                     dtype=np.float64))
+                     dtype=np.float64),
+        tcode=np.array(tcodes, dtype=np.int64),
+        hops=np.array([op.hops for op in ops], dtype=np.float64),
+        lane_code=np.array(lane_code, dtype=np.int64),
+        n_lanes=max(len(lanes), 1),
+        any_tier=any(c >= 0 for c in tcodes))
 
 
 # ---------------------------------------------------------------------------
@@ -118,7 +138,7 @@ def op_arrays(ops: Sequence) -> OpArrays:
 class ChainParams:
     """One hardware design point (or a broadcastable batch of them).
 
-    The nine ``hw.PARAM_FIELDS`` are continuous; the rest are the
+    The ``hw.PARAM_FIELDS`` are continuous; the rest are the
     categorical/static knobs that stay fixed within a batch."""
     peak_flops: object
     datapath_scale: object
@@ -129,6 +149,13 @@ class ChainParams:
     host_dispatch_s: object
     host_bw: object
     host_threads: object
+    # fabric tier rates (continuous PARAM_FIELDS like the rest; the tier
+    # named "ici" shares ``ici_bw`` with the legacy collective lane)
+    ici_lat_s: object
+    node_bw: object
+    node_lat_s: object
+    inter_bw: object
+    inter_lat_s: object
     # statics
     interface: str
     overlap: bool
@@ -151,6 +178,11 @@ class ChainParams:
                    host_dispatch_s=config.host_dispatch_s,
                    host_bw=config.host_bw,
                    host_threads=config.host_threads,
+                   ici_lat_s=config.ici_lat_s,
+                   node_bw=config.node_bw,
+                   node_lat_s=config.node_lat_s,
+                   inter_bw=config.inter_bw,
+                   inter_lat_s=config.inter_lat_s,
                    interface=eff.interface, overlap=eff.overlap,
                    vmem_resident_bytes=eff.vmem_resident_bytes,
                    dma_transfer_bytes=eff.dma_transfer_bytes,
@@ -255,6 +287,22 @@ def chain_terms(a: OpArrays, p: ChainParams, xp=np) -> ChainTerms:
         has_h = hc > 0.0
         has_c = a.coll > 0.0
         cdur = xp.where(has_c, a.coll / p.ici_bw, 0.0)
+        if a.any_tier:
+            # fabric hops: lane-only ops priced hops*lat + bytes/bw at
+            # their tier's rates; no host/compute charge.  Gated so
+            # tier-free programs run the exact pre-fabric operations.
+            is_t = a.tcode >= 0
+            t0 = a.tcode == 0
+            t1 = a.tcode == 1
+            lat = xp.where(t0, p.ici_lat_s,
+                           xp.where(t1, p.node_lat_s, p.inter_lat_s))
+            bw = xp.where(t0, p.ici_bw,
+                          xp.where(t1, p.node_bw, p.inter_bw))
+            cdur = xp.where(is_t, a.hops * lat + a.coll / bw, cdur)
+            has_c = is_t | has_c
+            comp = xp.where(is_t, 0.0, comp)
+            hc = xp.where(is_t, 0.0, hc)
+            has_h = hc > 0.0
     return ChainTerms(comp=comp, full=full, expo=expo, xfer=xfer, xe=xe,
                       hc=hc, cdur=cdur, factor=factor, has_h=has_h,
                       has_x=has_x, has_c=has_c)
@@ -268,6 +316,11 @@ def chain_params_for(config, device_class: str = "accel") -> ChainParams:
     interfaces outside :data:`CHAIN_INTERFACES` (custom interfaces keep
     going through the event-loop models)."""
     from repro.sim import engine as _engine
+    fab = getattr(config, "fabric", None)
+    if fab is not None and fab.has_overrides():
+        raise Unsupported(
+            "fabric carries explicit per-tier rate overrides; the analytic "
+            "model prices tiers from the flat PARAM_FIELDS only")
     eff, ports = _engine._class_params(config, device_class)
     if eff.interface not in CHAIN_INTERFACES:
         raise Unsupported(f"interface {eff.interface!r} has no analytic "
@@ -372,6 +425,11 @@ class CostModel:
         if type(base.energy) is not EnergyModel:
             raise Unsupported("custom EnergyModel subclass: the analytic "
                               "terms mirror the default model only")
+        if base.fabric is not None and base.fabric.has_overrides():
+            raise Unsupported(
+                "fabric carries explicit per-tier rate overrides; the "
+                "analytic model prices tiers from the flat PARAM_FIELDS "
+                "only")
         topo = base.resolved_topology()
         res = engine._resolve(base, topo)
         if len(res.sig_cfgs) != 1 or len(res.ports_l) != 1:
@@ -503,9 +561,22 @@ class CostModel:
               if n_workers is None
               else np.asarray(n_workers, dtype=np.float64))
         work = np.sum(t.xfer + t.comp, axis=-1) / nw
+        # collective relaxation: each LANE is serial, but distinct fabric
+        # lanes run in parallel — the busiest lane bounds the span (the
+        # single-lane case is the legacy serial-ICI sum, bit for bit)
+        a = self.arrays
+        if a.n_lanes > 1:
+            coll_lane = np.zeros(B, dtype=np.float64)
+            for l in range(a.n_lanes):
+                mask = a.lane_code == l
+                if mask.any():
+                    coll_lane = np.maximum(
+                        coll_lane, np.sum(t.cdur[:, mask], axis=-1))
+        else:
+            coll_lane = np.sum(t.cdur, axis=-1)
         lower = np.maximum(
             np.maximum(crit, work),
-            np.maximum(np.sum(hcz, axis=-1), np.sum(t.cdur, axis=-1)))
+            np.maximum(np.sum(hcz, axis=-1), coll_lane))
         # upper bound: serial sum with every transfer at the worst-case
         # contention factor (live transfers never exceed the devices on
         # the link, so factor <= max(1, n_workers/ports))
@@ -530,7 +601,11 @@ class CostModel:
                           has_dur=jnp.asarray(a.has_dur),
                           dur=jnp.asarray(a.dur),
                           has_tov=jnp.asarray(a.has_tov),
-                          tov=jnp.asarray(a.tov))
+                          tov=jnp.asarray(a.tov),
+                          tcode=jnp.asarray(a.tcode),
+                          hops=jnp.asarray(a.hops),
+                          lane_code=a.lane_code, n_lanes=a.n_lanes,
+                          any_tier=a.any_tier)
             statics = self._statics
 
             def one(pvec):

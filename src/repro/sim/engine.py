@@ -136,6 +136,18 @@ class EngineConfig:
     # heterogeneous SoC: per-device/per-link model (None = the homogeneous
     # expansion of the fields above; see hw.SoCTopology)
     topology: Optional[SoCTopology] = None
+    # cluster fabric: per-hop rates of the three canonical tiers (ops with
+    # ``tier`` set are priced ``hops * lat + bytes / bw`` on their lane).
+    # ``ici_lat_s`` defaults to 0 so the legacy single-lane collective
+    # charge is a zero-latency single-tier fabric, bit for bit.  ``fabric``
+    # carries the tier structure; explicit per-tier rates on it override
+    # these flat fields (same inheritance convention as Device/Link).
+    ici_lat_s: float = hw.ICI_LAT_S
+    node_bw: float = hw.NODE_BW
+    node_lat_s: float = hw.NODE_LAT_S
+    inter_bw: float = hw.INTER_BW
+    inter_lat_s: float = hw.INTER_LAT_S
+    fabric: Optional[hw.Fabric] = None
 
     @property
     def overlap(self) -> bool:
@@ -451,6 +463,11 @@ def chain_op_costs(op: CostedOp, config: EngineConfig
     (``repro.sim.serving``) uses this to advance its simulated clock with
     precisely the costs ``run()`` will charge for the same ops.
     """
+    if op.tier is not None:
+        # fabric hop: lane-only occupancy — no placement, host dispatch,
+        # transfer or compute
+        lat, bw = hw.resolve_tier_params(config, op.tier)
+        return 0.0, 0.0, 0.0, op.hops * lat + op.collective_bytes / bw
     eff, ports = _class_params(config, op.device_class)
     host = config.host_dispatch_s + (
         op.bytes / config.host_bw / config.host_threads
@@ -527,13 +544,22 @@ def _run_events(program: Program, config: EngineConfig, plan: Plan,
     affinity_worker: Dict[str, int] = {}
     done: Dict[str, float] = {}
     host_free = 0.0
-    ici_free = 0.0
+    # serial collective lanes: the legacy single ICI lane generalizes to
+    # one lane per contended fabric link set (lane "ici" = the old lane,
+    # same floats); fabric-tier hop ops occupy only their lane
+    lane_free: Dict[str, float] = {}
     transfer_energy = 0.0
     iface_time_total = 0.0      # full interface seconds charged this run
 
     ops = plan.ops
     consumers = plan.consumers
     n_waiting = dict(plan.n_waiting)
+
+    # per-tier (latency, bandwidth) for fabric hop ops, resolved once
+    tier_rates: Dict[str, Tuple[float, float]] = {}
+    for p_op in program.ops:
+        if p_op.tier is not None and p_op.tier not in tier_rates:
+            tier_rates[p_op.tier] = hw.resolve_tier_params(config, p_op.tier)
 
     # per-device cost signatures + link partition (memoized per config;
     # the homogeneous expansion has exactly one signature: the flat
@@ -668,6 +694,32 @@ def _run_events(program: Program, config: EngineConfig, plan: Plan,
     while heap:
         _, _, nm = heappop(heap)
         op = ops[nm]
+        if op.tier is not None:
+            # fabric hop: occupies only its lane — no worker placement,
+            # host dispatch, transfer or compute
+            dep_ready = max((done[d] for d in op.deps if d in done),
+                            default=0.0)
+            lat, bw = tier_rates[op.tier]
+            cdur = op.hops * lat + op.collective_bytes / bw
+            lf = lane_free.get(op.lane, 0.0)
+            c0 = lf if lf > dep_ready else dep_ready
+            events.append(Event(op.lane, f"{nm}:coll", c0, cdur,
+                                "collective", op.phase))
+            end = c0 + cdur
+            lane_free[op.lane] = end
+            done[nm] = end
+            n_unrestricted -= 1
+            scheduled += 1
+            for cn in consumers.get(nm, ()):
+                n_waiting[cn] -= 1
+                if n_waiting[cn] == 0:
+                    next_wave.append((-_prio(cn), seq, cn))
+                    seq += 1
+            if not heap and next_wave:
+                heap = next_wave
+                heapify(heap)
+                next_wave = []
+            continue
         aff = op.affinity
         cds = cand[op.device_class]
         if aff is not None and aff in affinity_worker:
@@ -741,11 +793,12 @@ def _run_events(program: Program, config: EngineConfig, plan: Plan,
         # metric, matching the closed-form breakdown; the ring-model
         # wire bytes feed the roofline collective term instead)
         if op.collective_bytes > 0.0:
-            c0 = ici_free if ici_free > t else t
+            lf = lane_free.get(op.lane, 0.0)
+            c0 = lf if lf > t else t
             cdur = op.collective_bytes / config.ici_bw
-            events.append(Event("ici", f"{nm}:coll", c0, cdur, "collective",
-                                op.phase))
-            ici_free = c0 + cdur
+            events.append(Event(op.lane, f"{nm}:coll", c0, cdur,
+                                "collective", op.phase))
+            lane_free[op.lane] = c0 + cdur
             t = c0 + cdur
         done[nm] = t
         scheduled += 1
@@ -817,6 +870,9 @@ def _run_chain(program: Program, config: EngineConfig, topo: SoCTopology
     from repro.sim import costmodel
     if eff.interface not in costmodel.CHAIN_INTERFACES:
         return None                         # registered custom interface
+    if (config.fabric is not None and config.fabric.has_overrides()
+            and any(op.tier is not None for op in ops)):
+        return None     # explicit per-tier rates: event loop resolves them
     t = costmodel.chain_terms(
         costmodel.op_arrays(ops),
         costmodel.ChainParams.from_engine(config, eff, ports))
@@ -841,6 +897,9 @@ def _run_chain(program: Program, config: EngineConfig, topo: SoCTopology
         avail = [0.0] * n
         widx = []
         for i in range(m):
+            if ops[i].tier is not None:     # lane-only: never placed
+                widx.append(0)
+                continue
             cs = cand[ops[i].device_class]
             w = cs[0] if len(cs) == 1 else min(cs, key=avail.__getitem__)
             avail[w] = cum[4 * i + 2]       # end of this op's compute
@@ -855,6 +914,11 @@ def _run_chain(program: Program, config: EngineConfig, topo: SoCTopology
     for i in range(m):
         op = ops[i]
         b = 4 * i
+        if op.tier is not None:
+            # fabric hop: lane event only (matches the event-loop branch)
+            events.append(Event(op.lane, f"{op.name}:coll", cum[b + 2],
+                                cdur_l[i], "collective", op.phase))
+            continue
         wname = worker_names[widx[i]]
         if hh[i]:
             events.append(Event("host", f"{op.name}:dispatch",
@@ -866,7 +930,7 @@ def _run_chain(program: Program, config: EngineConfig, topo: SoCTopology
         events.append(Event(wname, op.name, cum[b + 1], comp_l[i],
                             "compute", op.phase))
         if hcoll[i]:
-            events.append(Event("ici", f"{op.name}:coll", cum[b + 2],
+            events.append(Event(op.lane, f"{op.name}:coll", cum[b + 2],
                                 cdur_l[i], "collective", op.phase))
 
     # sequential accumulations (match the loop's += order exactly: within

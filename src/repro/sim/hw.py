@@ -34,6 +34,23 @@ ICI_BW = 50e9                # bytes/s per link
 VMEM_BW = 11e12              # effective on-chip bandwidth
 HOST_OVERHEAD_S = 50e-6      # per-step launch/framework floor (host runtime)
 
+# -- fabric tiers (cluster-scale interconnect hierarchy) --------------------
+# Per-hop latency + bandwidth for the three canonical tiers.  ``ici`` keeps
+# zero default latency so the legacy single-lane collective charge
+# (bytes / ici_bw, no latency term) is reproduced bit-for-bit by a
+# single-tier fabric.
+ICI_LAT_S = 0.0              # intra-chip hop latency (0 = legacy lane)
+NODE_BW = 25e9               # bytes/s intra-node (board-level links;
+                             # slower than the on-chip ici lane)
+NODE_LAT_S = 1e-6            # per-hop intra-node latency
+INTER_BW = 10e9              # bytes/s inter-node (100G-class NIC/switch)
+INTER_LAT_S = 5e-6           # per-hop inter-node latency (NIC + switch)
+
+# -- TCO (cost-per-step) constants ------------------------------------------
+ACCEL_COST_USD = 15_000.0    # per accelerator, incl. host/switch share
+ACCEL_AMORT_S = 3 * 365 * 24 * 3600.0   # 3-year straight-line amortization
+USD_PER_KWH = 0.10           # blended datacenter energy price
+
 # device kinds with modeled semantics; ``kind`` is open-ended (any string
 # works as a placement class), these are the conventional ones
 DEVICE_KINDS = ("cpu", "accel", "dsp")
@@ -185,14 +202,15 @@ def _homogeneous_cached(n: int) -> SoCTopology:
 
 PARAM_FIELDS: Tuple[str, ...] = (
     "peak_flops", "datapath_scale", "hbm_bw", "vmem_bw", "ici_bw",
-    "hbm_ports", "host_dispatch_s", "host_bw", "host_threads")
+    "hbm_ports", "host_dispatch_s", "host_bw", "host_threads",
+    "ici_lat_s", "node_bw", "node_lat_s", "inter_bw", "inter_lat_s")
 
 ParamsLike = Union[Mapping[str, float], Sequence[float]]
 
 
 def params_from_config(config) -> Tuple[float, ...]:
     """The ``PARAM_FIELDS`` vector of an ``EngineConfig``-like object (any
-    object carrying the nine continuous fields), as plain floats in field
+    object carrying the continuous fields), as plain floats in field
     order."""
     return tuple(float(getattr(config, f)) for f in PARAM_FIELDS)
 
@@ -235,3 +253,201 @@ def with_ports(topo: SoCTopology, ports: float) -> SoCTopology:
     links = topo.links if topo.links else (_DEFAULT_LINK,)
     return replace(topo, links=tuple(replace(l, ports=float(ports))
                                      for l in links))
+
+
+# ---------------------------------------------------------------------------
+# hierarchical fabric: the cluster-scale generalization of ``Link``
+#
+# An ``SoCTopology`` models the devices *inside* one SoC; a ``Fabric``
+# models the interconnect hierarchy *between* accelerators at cluster
+# scale.  Tiers are listed innermost-first — e.g. 4 accelerators per
+# chip on ICI, 8 chips per node on board-level links, N nodes behind
+# NIC/switch — and each tier is a (latency, bandwidth) pair.  A tier
+# whose ``bandwidth``/``latency_s`` is ``None`` inherits the flat
+# ``EngineConfig`` field named by ``TIER_FIELDS`` (the same inheritance
+# convention ``Device``/``Link`` use), which is what lets the DSE layer
+# treat fabric rates as continuous ``PARAM_FIELDS``.
+
+TIER_NAMES: Tuple[str, ...] = ("ici", "node", "inter")
+
+# tier name -> (EngineConfig bandwidth field, latency field)
+TIER_FIELDS: Dict[str, Tuple[str, str]] = {
+    "ici": ("ici_bw", "ici_lat_s"),
+    "node": ("node_bw", "node_lat_s"),
+    "inter": ("inter_bw", "inter_lat_s"),
+}
+
+
+@dataclass(frozen=True)
+class FabricTier:
+    """One level of the interconnect hierarchy.
+
+    ``group_size`` is how many units of the tier below this tier groups
+    (for the innermost tier: accelerators per group).  ``None`` rates
+    inherit the flat ``EngineConfig`` fields for this tier name."""
+    name: str
+    group_size: int
+    bandwidth: Optional[float] = None        # None -> EngineConfig field
+    latency_s: Optional[float] = None        # None -> EngineConfig field
+
+
+@dataclass(frozen=True)
+class Fabric:
+    """Hierarchical interconnect: tiers innermost-first.
+
+    Accelerators are numbered 0..n_accel-1 in tier order, innermost
+    fastest-varying: with tiers ``ici(4), node(8), inter(2)`` ranks
+    0-3 share a chip, 0-31 share a node.  ``span_tier(members)`` gives
+    the outermost tier a member set crosses — the bottleneck tier a flat
+    collective over those members runs on.  ``lane(members, t)`` names
+    the contended engine lane: collectives sharing a tier AND a leading
+    member contend (same physical links); disjoint groups on the same
+    tier proceed in parallel."""
+    tiers: Tuple[FabricTier, ...]
+    name: str = "fabric"
+
+    def __post_init__(self):
+        object.__setattr__(self, "tiers", tuple(self.tiers))
+        if not self.tiers:
+            raise ValueError("Fabric needs at least one tier")
+        order = [TIER_NAMES.index(t.name) if t.name in TIER_NAMES else -1
+                 for t in self.tiers]
+        if -1 in order:
+            bad = [t.name for t in self.tiers if t.name not in TIER_NAMES]
+            raise ValueError(
+                f"unknown fabric tier names {bad}; tiers are named from "
+                f"{TIER_NAMES} (innermost-first)")
+        if sorted(order) != order or len(set(order)) != len(order):
+            raise ValueError(
+                f"fabric tiers must be innermost-first in {TIER_NAMES} "
+                f"order, got {[t.name for t in self.tiers]}")
+        for t in self.tiers:
+            if int(t.group_size) < 1:
+                raise ValueError(
+                    f"tier {t.name!r} group_size must be >= 1, "
+                    f"got {t.group_size}")
+
+    # -- construction -------------------------------------------------------
+
+    @classmethod
+    def single_tier(cls, n_accel: int, *, bandwidth: Optional[float] = None,
+                    latency_s: Optional[float] = None,
+                    name: str = "soc") -> "Fabric":
+        """One flat ICI tier over ``n_accel`` accelerators — the fabric
+        equivalent of today's single shared collective lane (bit-identical
+        to it at the default zero ICI latency)."""
+        return cls(tiers=(FabricTier("ici", max(int(n_accel), 1),
+                                     bandwidth=bandwidth,
+                                     latency_s=latency_s),),
+                   name=name)
+
+    @classmethod
+    def cluster(cls, n_accel: int, *, accels_per_chip: int = 4,
+                chips_per_node: int = 8, name: str = "") -> "Fabric":
+        """A fabric covering ``n_accel`` accelerators with the canonical
+        three tiers, sized bottom-up: ICI groups of ``accels_per_chip``,
+        board-level node groups of ``chips_per_node`` chips, and as many
+        NIC/switch-connected nodes as it takes to cover ``n_accel``.
+        Small counts drop the unused outer tiers."""
+        n = max(int(n_accel), 1)
+        if n <= accels_per_chip:
+            tiers = (FabricTier("ici", n),)
+        elif n <= accels_per_chip * chips_per_node:
+            tiers = (FabricTier("ici", accels_per_chip),
+                     FabricTier("node", -(-n // accels_per_chip)))
+        else:
+            per_node = accels_per_chip * chips_per_node
+            tiers = (FabricTier("ici", accels_per_chip),
+                     FabricTier("node", chips_per_node),
+                     FabricTier("inter", -(-n // per_node)))
+        return cls(tiers=tiers, name=name or f"{n}accel-cluster")
+
+    # -- queries ------------------------------------------------------------
+
+    @property
+    def n_accel(self) -> int:
+        out = 1
+        for t in self.tiers:
+            out *= int(t.group_size)
+        return out
+
+    def leaves_per_group(self) -> Tuple[int, ...]:
+        """Cumulative products: ``leaves_per_group()[t]`` accelerators
+        form one group at tier ``t``."""
+        out, acc = [], 1
+        for t in self.tiers:
+            acc *= int(t.group_size)
+            out.append(acc)
+        return tuple(out)
+
+    def span_tier(self, members: Sequence[int]) -> int:
+        """Index of the outermost tier ``members`` crosses: the smallest
+        ``t`` with every member in the same tier-``t`` group (the whole
+        fabric is one group at the top tier)."""
+        ms = [int(m) for m in members]
+        if not ms:
+            raise ValueError("span_tier needs at least one member")
+        if max(ms) >= self.n_accel or min(ms) < 0:
+            raise ValueError(
+                f"members {min(ms)}..{max(ms)} out of range for "
+                f"{self.n_accel}-accelerator fabric")
+        for t, per in enumerate(self.leaves_per_group()):
+            if all(m // per == ms[0] // per for m in ms):
+                return t
+        return len(self.tiers) - 1
+
+    def lane(self, members: Sequence[int],
+             tier_idx: Optional[int] = None) -> str:
+        """Engine lane name for a collective over ``members``:
+        ``"<tier>:<min member>"``.  Same tier + same leading member =>
+        same physical links => contention; disjoint groups get distinct
+        lanes and run in parallel."""
+        t = self.span_tier(members) if tier_idx is None else int(tier_idx)
+        return f"{self.tiers[t].name}:{min(int(m) for m in members)}"
+
+    def has_overrides(self) -> bool:
+        """Whether any tier pins an explicit rate (instead of inheriting
+        the flat config fields the analytic model vectorizes over)."""
+        return any(t.bandwidth is not None or t.latency_s is not None
+                   for t in self.tiers)
+
+    def describe(self) -> str:
+        """Compact label like ``4ici x 8node x 2inter``."""
+        return " x ".join(f"{t.group_size}{t.name}" for t in self.tiers)
+
+
+def resolve_tier_params(config, tier: str) -> Tuple[float, float]:
+    """(latency_s, bandwidth) the engine charges per hop on ``tier``.
+
+    An explicit rate on the matching ``config.fabric`` tier wins; ``None``
+    falls back to the flat ``EngineConfig`` fields named by
+    ``TIER_FIELDS`` — the same inheritance convention as ``Device`` and
+    ``Link``, and what keeps fabric rates inside the continuous
+    ``PARAM_FIELDS`` design vector."""
+    if tier not in TIER_FIELDS:
+        raise ValueError(
+            f"unknown fabric tier {tier!r}; tiers are named from "
+            f"{TIER_NAMES}")
+    bw_field, lat_field = TIER_FIELDS[tier]
+    bw = float(getattr(config, bw_field))
+    lat = float(getattr(config, lat_field))
+    fab = getattr(config, "fabric", None)
+    if fab is not None:
+        for t in fab.tiers:
+            if t.name == tier:
+                if t.bandwidth is not None:
+                    bw = float(t.bandwidth)
+                if t.latency_s is not None:
+                    lat = float(t.latency_s)
+                break
+    return lat, bw
+
+
+def tco_per_step(n_accel: int, step_time_s: float,
+                 energy_j: float) -> float:
+    """Amortized USD cost of one training step on ``n_accel``
+    accelerators: straight-line capex over ``ACCEL_AMORT_S`` plus energy
+    at ``USD_PER_KWH``.  The TCO column of the cluster sweeps."""
+    capex = n_accel * ACCEL_COST_USD / ACCEL_AMORT_S * step_time_s
+    energy = energy_j / 3.6e6 * USD_PER_KWH
+    return capex + energy

@@ -129,6 +129,7 @@ class TrainingResult:
             "bubble_excess": self.bubble_fraction - self.bubble_bound,
             "stage_util_mean": sum(utils) / len(utils) if utils else 0.0,
             "stage_util_min": min(utils) if utils else 0.0,
+            "collective_s": self.engine.breakdown.collective_s,
             "n_ops": float(len(self.program.ops)),
         }
 
@@ -178,7 +179,8 @@ def simulate_training(cfg, *, n_stages: int = 1, n_microbatches: int = 1,
                       config: Optional[EngineConfig] = None,
                       bytes_per_param: float = 2.0,
                       bytes_per_act: float = 2.0,
-                      dp_degree: int = 1,
+                      dp_degree: int = 1, tp_degree: int = 1,
+                      fabric=None, collective_algo: str = "ring",
                       name: str = "") -> TrainingResult:
     """Simulate one pipeline-parallel training step; see the module header.
 
@@ -189,6 +191,18 @@ def simulate_training(cfg, *, n_stages: int = 1, n_microbatches: int = 1,
     and no topology the program runs on the flat config unchanged, so the
     single-stage single-microbatch case is the plain
     ``ir.from_training_step`` chain.
+
+    **Cluster placement** (``fabric`` given): one global rank per
+    accelerator, ``rank(d, s, t) = (d * n_stages + s) * tp_degree + t``
+    (TP fastest-varying, so TP groups sit on the innermost fabric tiers).
+    DP-rank 0's pipeline is simulated; the collectives it participates in
+    are lowered to explicit per-hop fabric transfers
+    (``ir.from_collective``): TP all-reduces after every forward/backward
+    (per stage, per microbatch, on the stage's TP-group lane), pipeline
+    boundary tensors as hops on the tier the adjacent stages span, and
+    the per-stage DP gradient all-reduce with ``collective_algo`` — which
+    starts as soon as THAT stage's last backward retires, so late stages'
+    gradient reduction genuinely overlaps earlier stages' backwards.
     """
     if config is None:
         config = EngineConfig()
@@ -197,6 +211,8 @@ def simulate_training(cfg, *, n_stages: int = 1, n_microbatches: int = 1,
                          f"one of {SCHEDULES}")
     n_stages = int(n_stages)
     n_microbatches = int(n_microbatches)
+    tp_degree = int(tp_degree)
+    dp_degree = int(dp_degree)
     if n_microbatches < 1:
         raise ValueError(f"n_microbatches must be >= 1, "
                          f"got {n_microbatches}")
@@ -205,6 +221,14 @@ def simulate_training(cfg, *, n_stages: int = 1, n_microbatches: int = 1,
             f"global_batch {global_batch} is not divisible by "
             f"n_microbatches {n_microbatches}")
     mb_batch = global_batch // n_microbatches
+    if tp_degree > 1 and fabric is None:
+        raise ValueError("tp_degree > 1 requires a fabric")
+    n_accel = dp_degree * n_stages * tp_degree
+    if fabric is not None and fabric.n_accel < n_accel:
+        raise ValueError(
+            f"fabric {fabric.describe()} has {fabric.n_accel} "
+            f"accelerators; placement dp{dp_degree} x pp{n_stages} x "
+            f"tp{tp_degree} needs {n_accel}")
 
     pinned = n_stages > 1 or config.topology is not None
     if pinned:
@@ -213,6 +237,18 @@ def simulate_training(cfg, *, n_stages: int = 1, n_microbatches: int = 1,
     else:
         topo, stage_devs = None, ("",)
         run_config = config
+    if fabric is not None and config.fabric is None:
+        # per-tier rate overrides on the Fabric resolve through the config
+        run_config = dataclasses.replace(run_config, fabric=fabric)
+
+    # placement: global rank of (dp, stage, tp) under the rank convention
+    def tp_members(s: int) -> Tuple[int, ...]:
+        base = s * tp_degree                  # dp rank 0
+        return tuple(base + t for t in range(tp_degree))
+
+    def dp_members(s: int) -> Tuple[int, ...]:
+        return tuple((d * n_stages + s) * tp_degree
+                     for d in range(dp_degree))
 
     # per-stage cost templates: ir.from_training_step is the single source
     # of cost truth (fwd/bwd per microbatch; reduce/update once per stage)
@@ -220,8 +256,35 @@ def simulate_training(cfg, *, n_stages: int = 1, n_microbatches: int = 1,
         cfg, seq_len=seq_len, batch=mb_batch,
         stage=(s if n_stages > 1 else None), n_stages=n_stages,
         bytes_per_param=bytes_per_param, bytes_per_act=bytes_per_act,
-        dp_degree=dp_degree) for s in range(n_stages)]
+        dp_degree=dp_degree, tp_degree=tp_degree, fabric=fabric,
+        collective_algo=collective_algo,
+        tp_group=tp_members(s) if fabric is not None else None,
+        dp_group=dp_members(s) if fabric is not None else None)
+        for s in range(n_stages)]
     by_name = [{op.name: op for op in t.ops} for t in templates]
+
+    # hop segments of each template (empty without a fabric): the TP
+    # all-reduce after fwd/bwd and the per-stage DP gradient reduce
+    def _segment(t: Program, prefix: str):
+        sel = [op for op in t.ops if op.name.startswith(prefix)]
+        return sel, (ir._sinks(sel) if sel else ())
+
+    tpf_seg = [_segment(t, "train/tpf") for t in templates]
+    tpb_seg = [_segment(t, "train/tpb") for t in templates]
+    dp_seg = [_segment(t, "train/dp") for t in templates]
+
+    def f_out(s: int, m: int) -> Tuple[str, ...]:
+        """Names the stage-s microbatch-m forward RESULT waits on (the
+        TP all-reduce sinks when TP is on, else the fwd op itself)."""
+        sinks = tpf_seg[s][1]
+        return (tuple(f"{n}@s{s}m{m}" for n in sinks)
+                or (f"F/s{s}/m{m}",))
+
+    def b_out(s: int, m: int) -> Tuple[str, ...]:
+        sinks = tpb_seg[s][1]
+        return (tuple(f"{n}@s{s}m{m}" for n in sinks)
+                or (f"B/s{s}/m{m}",))
+
     # one residual-stream tensor crosses each stage boundary per microbatch
     boundary_bytes = (float(cfg.d_model) * mb_batch * seq_len
                       * bytes_per_act)
@@ -229,43 +292,96 @@ def simulate_training(cfg, *, n_stages: int = 1, n_microbatches: int = 1,
     def cls(s: int) -> str:
         return f"stage{s}" if pinned else "accel"
 
+    def boundary_hop(nm: str, lo: int, recv: int,
+                     deps: Tuple[str, ...]) -> CostedOp:
+        """The stage-(lo)<->(lo+1) boundary tensor, placed on receiving
+        stage ``recv``.  Stages sharing a chip (span tier 0) keep the
+        legacy device-transfer modeling — which is what makes a
+        single-tier fabric bit-identical to the pre-fabric simulator;
+        stages on different chips/nodes ride the fabric tier their member
+        sets span."""
+        members = tp_members(lo) + tp_members(lo + 1)
+        ti = fabric.span_tier(members)
+        if ti == 0:
+            return CostedOp(name=nm, bytes_in=boundary_bytes, deps=deps,
+                            phase=f"s{recv}", device_class=cls(recv))
+        return CostedOp(name=nm, collective_bytes=boundary_bytes,
+                        wire_bytes=boundary_bytes,
+                        tier=fabric.tiers[ti].name,
+                        lane=fabric.lane(members, ti),
+                        deps=deps, phase=f"s{recv}",
+                        device_class=cls(recv))
+
     ops: List[CostedOp] = []
     for s in range(n_stages):
-        prev: Optional[str] = None      # serialization edge on this device
+        prev: Tuple[str, ...] = ()      # serialization edge on this device
 
         def emit(op: CostedOp) -> None:
             nonlocal prev
             deps = tuple(op.deps)
-            if prev is not None and prev not in deps:
-                deps = (prev,) + deps
-            ops.append(ir.replace(op, deps=deps))
-            prev = op.name
+            add = tuple(p for p in prev if p not in deps)
+            ops.append(ir.replace(op, deps=add + deps))
+            prev = (op.name,)
+
+        def emit_hops(seg, tag: str, roots: Tuple[str, ...]) -> None:
+            """Clone a hop segment under ``tag``: internal deps rename
+            with it, the segment's roots re-root on ``roots``.  Parallel
+            branches (hierarchical sub-group chains) stay parallel — only
+            the segment as a whole serializes with the device's schedule
+            (via ``roots``/``prev``), matching a blocking collective."""
+            nonlocal prev
+            seg_ops, seg_sinks = seg
+            names = {o.name for o in seg_ops}
+            for o in seg_ops:
+                internal = tuple(f"{d}@{tag}" for d in o.deps
+                                 if d in names)
+                ops.append(ir.replace(o, name=f"{o.name}@{tag}",
+                                      deps=internal or roots,
+                                      phase=f"s{s}"))
+            prev = tuple(f"{n}@{tag}" for n in seg_sinks)
 
         for kind, m in schedule_order(schedule, s, n_stages,
                                       n_microbatches):
             if kind == "F":
                 if s > 0:               # activation arrives from stage s-1
-                    emit(CostedOp(name=f"xF/s{s}/m{m}",
-                                  bytes_in=boundary_bytes,
-                                  deps=(f"F/s{s-1}/m{m}",),
-                                  phase=f"s{s}", device_class=cls(s)))
+                    if fabric is None:
+                        emit(CostedOp(name=f"xF/s{s}/m{m}",
+                                      bytes_in=boundary_bytes,
+                                      deps=(f"F/s{s-1}/m{m}",),
+                                      phase=f"s{s}", device_class=cls(s)))
+                    else:
+                        emit(boundary_hop(f"xF/s{s}/m{m}", s - 1, s,
+                                          f_out(s - 1, m)))
                 emit(ir.replace(by_name[s]["train/fwd"],
                                 name=f"F/s{s}/m{m}", deps=(),
                                 phase=f"s{s}", device_class=cls(s)))
+                if tpf_seg[s][0]:
+                    emit_hops(tpf_seg[s], f"s{s}m{m}", prev)
             else:
                 if s < n_stages - 1:    # gradient arrives from stage s+1
-                    emit(CostedOp(name=f"xB/s{s}/m{m}",
-                                  bytes_in=boundary_bytes,
-                                  deps=(f"B/s{s+1}/m{m}",),
-                                  phase=f"s{s}", device_class=cls(s)))
+                    if fabric is None:
+                        emit(CostedOp(name=f"xB/s{s}/m{m}",
+                                      bytes_in=boundary_bytes,
+                                      deps=(f"B/s{s+1}/m{m}",),
+                                      phase=f"s{s}", device_class=cls(s)))
+                    else:
+                        emit(boundary_hop(f"xB/s{s}/m{m}", s, s,
+                                          b_out(s + 1, m)))
                 emit(ir.replace(by_name[s]["train/bwd"],
                                 name=f"B/s{s}/m{m}",
                                 deps=(f"F/s{s}/m{m}",),
                                 phase=f"s{s}", device_class=cls(s)))
+                if tpb_seg[s][0]:
+                    emit_hops(tpb_seg[s], f"s{s}m{m}", prev)
         if "train/reduce" in by_name[s]:
             emit(ir.replace(by_name[s]["train/reduce"],
                             name=f"R/s{s}", deps=(),
                             phase=f"s{s}", device_class=cls(s)))
+        elif dp_seg[s][0]:
+            # the stage's gradient all-reduce waits only for ITS last
+            # backward — late stages reduce while earlier stages are
+            # still in backward (DP/bwd overlap across the pipeline)
+            emit_hops(dp_seg[s], f"s{s}", prev)
         emit(ir.replace(by_name[s]["train/update"],
                         name=f"U/s{s}", deps=(),
                         phase=f"s{s}", device_class=cls(s)))
@@ -277,6 +393,9 @@ def simulate_training(cfg, *, n_stages: int = 1, n_microbatches: int = 1,
         meta={"schedule": schedule, "n_stages": n_stages,
               "n_microbatches": n_microbatches, "seq_len": seq_len,
               "global_batch": global_batch, "dp_degree": dp_degree,
+              "tp_degree": tp_degree, "n_accel": n_accel,
+              "collective_algo": collective_algo,
+              "fabric": fabric.describe() if fabric is not None else None,
               "tokens": tokens})
     res = engine.run(program, run_config)
 
@@ -319,4 +438,8 @@ def simulate_training(cfg, *, n_stages: int = 1, n_microbatches: int = 1,
         config=run_config,
         meta={"seq_len": seq_len, "global_batch": global_batch,
               "bytes_per_param": bytes_per_param,
-              "bytes_per_act": bytes_per_act, "dp_degree": dp_degree})
+              "bytes_per_act": bytes_per_act, "dp_degree": dp_degree,
+              "tp_degree": tp_degree, "n_accel": n_accel,
+              "collective_algo": collective_algo,
+              "fabric": (fabric.describe()
+                         if fabric is not None else None)})

@@ -20,6 +20,7 @@ BENCH_SOC = Path("BENCH_soc.json")
 BENCH_TRAINING = Path("BENCH_training.json")
 BENCH_DSE = Path("BENCH_dse.json")
 BENCH_FLEET = Path("BENCH_fleet.json")
+BENCH_CLUSTER = Path("BENCH_cluster.json")
 
 
 def _finite_pos(x) -> bool:
@@ -263,3 +264,58 @@ def test_hillclimb_confirmed_improvements():
     base = mem("falcon_mamba_7b|train_4k||mb1")
     worse = mem("falcon_mamba_7b|train_4k|ssm_impl=chunked|mb1")
     assert worse > base
+
+
+@pytest.mark.skipif(not BENCH_CLUSTER.exists(), reason="bench not present")
+def test_bench_cluster_schema():
+    b = json.loads(BENCH_CLUSTER.read_text())
+    assert set(b) >= {"cluster_grid", "cheapest_under_target", "bounds",
+                      "hier_vs_ring", "single_tier_identity", "budget_s",
+                      "recorded", "note"}
+    # the recorded correctness probes must all hold
+    assert b["bounds"]["exact"] is True
+    assert b["bounds"]["worst_rel_err"] <= 1e-12
+    assert b["hier_vs_ring"]["all_hold"] is True
+    sid = b["single_tier_identity"]
+    assert sid["no_dp_bit_identical"] is True
+    assert sid["dp_ring_matches"] is True
+
+    grid = b["cluster_grid"]
+    need = {"model", "n_accel", "dp_degree", "pp_degree", "tp_degree",
+            "collective_algo", "step_time_s", "cluster_tokens_per_s",
+            "cluster_j", "tco_usd_per_step", "tco_usd_per_mtok",
+            "speedup", "collective_s", "fabric"}
+    assert grid
+    for rec in grid:
+        assert need <= set(rec), rec.get("program")
+        assert _finite_pos(rec["step_time_s"])
+        assert _finite_pos(rec["cluster_tokens_per_s"])
+        assert _finite_pos(rec["tco_usd_per_step"])
+        assert _finite_pos(rec["speedup"])
+        assert rec["collective_algo"] in ("ring", "tree", "hierarchical")
+        assert (rec["dp_degree"] * rec["pp_degree"] * rec["tp_degree"]
+                == rec["n_accel"])
+    # the acceptance sweep: >= 512 accelerators with all three degrees on
+    assert any(rec["n_accel"] >= 512 and rec["dp_degree"] > 1
+               and rec["pp_degree"] > 1 and rec["tp_degree"] > 1
+               for rec in grid)
+    # hierarchical <= ring cell-by-cell on node/inter-spanning dp groups
+    cells = {}
+    for rec in grid:
+        key = (rec["model"], rec["n_accel"], rec["dp_degree"],
+               rec["pp_degree"], rec["tp_degree"])
+        cells.setdefault(key, {})[rec["collective_algo"]] = \
+            rec["step_time_s"]
+    assert cells
+    for key, cell in cells.items():
+        if "ring" in cell and "hierarchical" in cell:
+            assert cell["hierarchical"] <= cell["ring"] * (1 + 1e-9), key
+    # the headline question has an answer for both models
+    tgt = b["cheapest_under_target"]
+    assert _finite_pos(tgt["target_step_s"])
+    for model, best in tgt.items():
+        if model == "target_step_s" or best is None:
+            continue
+        assert best["step_time_s"] <= tgt["target_step_s"]
+        assert _finite_pos(best["tco_usd_per_step"])
+    assert all(_finite_pos(v) for v in b["budget_s"].values())

@@ -1,0 +1,261 @@
+"""First-class collectives vs the analytic bounds.
+
+The contract under test: ``ir.from_collective`` lowers ring / tree /
+hierarchical collectives into explicit per-hop fabric transfers, and the
+engine's makespan on an uncontended fabric equals the textbook closed
+forms EXACTLY (the lowering is a sum of identical steps, so the engine's
+left-to-right accumulation and the product-form bound agree to the last
+couple of ulps) — plus the structural properties: monotonicity in bytes /
+group size / latency, 1-member no-op bit-identity, and lane contention
+(same links serialize, disjoint links run in parallel).
+"""
+import dataclasses
+import math
+
+import pytest
+
+from tests._hyp import HAVE_HYPOTHESIS, given, settings, st
+
+from repro.sim import engine, ir
+from repro.sim.engine import EngineConfig
+from repro.sim.hw import Fabric, FabricTier, resolve_tier_params
+from repro.sim.ir import collective_time, from_collective
+
+REL = 1e-12
+
+# nonzero per-hop ICI latency so the latency terms of the bounds are
+# actually exercised (the flat default is 0.0 for legacy bit-compat)
+CONFIG = EngineConfig(ici_lat_s=2e-6)
+
+
+def _run(prog, config=CONFIG):
+    return engine.run(prog, config).makespan
+
+
+def _rel(a, b):
+    return abs(a - b) / max(abs(a), abs(b), 1e-300)
+
+
+# ---------------------------------------------------------------------------
+# closed forms, exact
+
+
+@pytest.mark.parametrize("p", [2, 3, 4, 8, 16])
+def test_ring_all_reduce_closed_form(p):
+    """Engine makespan == 2 (p-1)/p B/bw + 2 (p-1) lat, rel <= 1e-12."""
+    B = 96e6
+    fab = Fabric.single_tier(p)
+    lat, bw = resolve_tier_params(CONFIG, "ici")
+    t = _run(from_collective("all_reduce", B, p, fab))
+    closed = 2.0 * (p - 1) / p * B / bw + 2.0 * (p - 1) * lat
+    assert _rel(t, closed) <= REL
+    assert collective_time("all_reduce", B, p, fab, config=CONFIG) == t
+
+
+@pytest.mark.parametrize("p", [2, 3, 8])
+def test_ring_engine_equals_python_sum_bitwise(p):
+    """The engine IS the left-to-right accumulation of the hop costs."""
+    B = 50e6
+    fab = Fabric.single_tier(p)
+    lat, bw = resolve_tier_params(CONFIG, "ici")
+    t = _run(from_collective("all_reduce", B, p, fab))
+    acc = 0.0
+    for _ in range(2 * (p - 1)):        # 2(p-1) steps of B/p on one lane
+        acc += lat + (B / p) / bw
+    assert t == acc
+
+
+@pytest.mark.parametrize("kind", ["reduce_scatter", "all_gather"])
+@pytest.mark.parametrize("p", [2, 4, 16])
+def test_ring_rs_ag_closed_form(kind, p):
+    B = 96e6
+    fab = Fabric.single_tier(p)
+    lat, bw = resolve_tier_params(CONFIG, "ici")
+    t = _run(from_collective(kind, B, p, fab))
+    closed = (p - 1) / p * B / bw + (p - 1) * lat
+    assert _rel(t, closed) <= REL
+
+
+@pytest.mark.parametrize("p", [2, 3, 4, 8, 16])
+def test_tree_all_reduce_log_depth(p):
+    """Tree all-reduce: 2 ceil(log2 p) full-size hops — log-latency
+    depth, no (p-1)/p bandwidth discount."""
+    B = 96e6
+    fab = Fabric.single_tier(p)
+    lat, bw = resolve_tier_params(CONFIG, "ici")
+    t = _run(from_collective("all_reduce", B, p, fab, algo="tree"))
+    depth = max(1, (p - 1).bit_length())
+    assert _rel(t, 2.0 * depth * (lat + B / bw)) <= REL
+    assert depth == math.ceil(math.log2(p)) or p == 1
+
+
+def test_tree_beats_ring_when_latency_dominates():
+    """Tiny payload, many members: O(log p) latency < O(p) latency."""
+    p, B = 32, 8.0
+    fab = Fabric.single_tier(p)
+    ring = collective_time("all_reduce", B, p, fab, config=CONFIG)
+    tree = collective_time("all_reduce", B, p, fab, algo="tree",
+                           config=CONFIG)
+    assert tree < ring
+
+
+@pytest.mark.parametrize("p", [2, 4, 8])
+def test_all_to_all_closed_form(p):
+    B = 64e6
+    fab = Fabric.single_tier(p)
+    lat, bw = resolve_tier_params(CONFIG, "ici")
+    t = _run(from_collective("all_to_all", B, p, fab))
+    assert _rel(t, (p - 1) * (lat + (B / p) / bw)) <= REL
+
+
+def test_hierarchical_composed_per_tier_bound():
+    """2-tier hierarchical all-reduce == ring-RS within the inner tier
+    + ring all-reduce of B/k across the tier leads + ring-AG back, each
+    phase priced at ITS tier's latency/bandwidth."""
+    k, n = 4, 4
+    fab = Fabric(tiers=(FabricTier("node", k), FabricTier("inter", n)))
+    B = 128e6
+    lat_n, bw_n = resolve_tier_params(CONFIG, "node")
+    lat_i, bw_i = resolve_tier_params(CONFIG, "inter")
+    t = _run(from_collective("all_reduce", B, k * n, fab,
+                             algo="hierarchical"))
+    rs = (k - 1) * (lat_n + (B / k) / bw_n)
+    ar = 2.0 * (n - 1) * (lat_i + (B / (k * n)) / bw_i)
+    assert _rel(t, 2.0 * rs + ar) <= REL
+    assert collective_time("all_reduce", B, k * n, fab,
+                           algo="hierarchical", config=CONFIG) == t
+
+
+def test_hierarchical_le_ring_on_multi_tier():
+    """The hierarchical decomposition never loses to a flat ring on the
+    slow spanning tier (bandwidths decrease outward by construction)."""
+    fab = Fabric.cluster(64)
+    for p in (8, 16, 32, 64):
+        ring = collective_time("all_reduce", 128e6, p, fab, config=CONFIG)
+        hier = collective_time("all_reduce", 128e6, p, fab,
+                               algo="hierarchical", config=CONFIG)
+        assert hier <= ring * (1.0 + REL)
+
+
+def test_count_compression_is_exact():
+    """count=c back-to-back collectives cost exactly c x one (steps
+    serialize on the lane, so bytes and hops scale together)."""
+    fab = Fabric.single_tier(8)
+    one = collective_time("all_reduce", 32e6, 8, fab, config=CONFIG)
+    three = collective_time("all_reduce", 32e6, 8, fab, count=3.0,
+                            config=CONFIG)
+    assert _rel(three, 3.0 * one) <= REL
+
+
+# ---------------------------------------------------------------------------
+# structure: no-op identity, lanes, errors
+
+
+def test_one_member_group_is_noop_bit_identical():
+    assert from_collective("all_reduce", 1e9, (3,)).ops == []
+    assert from_collective("all_to_all", 1e9, 1).ops == []
+    base = ir.from_decode(_toy(), 4)
+    merged = ir.Program(list(base.ops)
+                        + list(from_collective("all_reduce", 1e9, 1).ops),
+                        name=base.name)
+    a = engine.run(base, CONFIG)
+    b = engine.run(merged, CONFIG)
+    assert a.makespan == b.makespan
+    assert a.energy["total_j"] == b.energy["total_j"]
+
+
+def test_same_lane_serializes_disjoint_lanes_parallel():
+    fab = Fabric.single_tier(8)
+    g1, g2 = tuple(range(4)), tuple(range(4, 8))
+    one = _run(from_collective("all_reduce", 64e6, g1, fab))
+    both_same = _run(ir.Program(
+        list(from_collective("all_reduce", 64e6, g1, fab,
+                             prefix="a").ops)
+        + list(from_collective("all_reduce", 64e6, g1, fab,
+                               prefix="b").ops), name="same-lane"))
+    both_disjoint = _run(ir.Program(
+        list(from_collective("all_reduce", 64e6, g1, fab,
+                             prefix="a").ops)
+        + list(from_collective("all_reduce", 64e6, g2, fab,
+                               prefix="b").ops), name="disjoint"))
+    assert _rel(both_same, 2.0 * one) <= REL    # same links: serialized
+    assert _rel(both_disjoint, one) <= REL      # disjoint links: parallel
+
+
+def test_hierarchical_subgroups_run_in_parallel():
+    """Phase 1/3 of hierarchical run one ring per inner group on
+    DISJOINT lanes: the makespan charges one group's ring, not k."""
+    k, n = 4, 2
+    fab = Fabric(tiers=(FabricTier("node", k), FabricTier("inter", n)))
+    B = 64e6
+    prog = from_collective("all_reduce", B, k * n, fab,
+                           algo="hierarchical")
+    lanes = {op.lane for op in prog.ops if op.name.startswith("c/rs")
+             or "/rs" in op.name}
+    assert len({op.lane for op in prog.ops}) >= 3   # 2 rs/ag lanes + inter
+    assert _run(prog) == collective_time("all_reduce", B, k * n, fab,
+                                         algo="hierarchical",
+                                         config=CONFIG)
+    assert lanes  # sanity: reduce-scatter phase exists
+
+
+def test_validation_errors():
+    fab = Fabric.single_tier(4)
+    with pytest.raises(ValueError):
+        from_collective("bogus", 1e6, 4, fab)
+    with pytest.raises(ValueError):
+        from_collective("all_reduce", 1e6, 4, fab, algo="bogus")
+    with pytest.raises(ValueError):
+        Fabric(tiers=(FabricTier("bogus", 4),))
+    with pytest.raises(ValueError):
+        # tiers must come in canonical inner-to-outer order
+        Fabric(tiers=(FabricTier("inter", 2), FabricTier("ici", 4)))
+
+
+def _toy():
+    from repro.core.config import ModelConfig
+    return ModelConfig(name="toy", family="dense", n_layers=2, d_model=64,
+                       n_heads=4, n_kv_heads=4, d_ff=128, vocab=256,
+                       head_dim=16)
+
+
+# ---------------------------------------------------------------------------
+# property tests: monotonicity
+
+
+@settings(max_examples=40, deadline=None)
+@given(b1=st.floats(1e3, 1e9), b2=st.floats(1e3, 1e9),
+       algo=st.sampled_from(["ring", "tree", "hierarchical"]))
+def test_monotone_in_bytes(b1, b2, algo):
+    lo, hi = sorted((b1, b2))
+    fab = Fabric.cluster(16)
+    t_lo = collective_time("all_reduce", lo, 16, fab, algo=algo,
+                           config=CONFIG)
+    t_hi = collective_time("all_reduce", hi, 16, fab, algo=algo,
+                           config=CONFIG)
+    assert t_lo <= t_hi * (1.0 + REL)
+
+
+@settings(max_examples=30, deadline=None)
+@given(p1=st.integers(1, 32), p2=st.integers(1, 32))
+def test_ring_monotone_in_group_size(p1, p2):
+    lo, hi = sorted((p1, p2))
+    fab = Fabric.single_tier(32)
+    t_lo = collective_time("all_reduce", 64e6, lo, fab, config=CONFIG)
+    t_hi = collective_time("all_reduce", 64e6, hi, fab, config=CONFIG)
+    assert t_lo <= t_hi * (1.0 + REL)
+
+
+@settings(max_examples=30, deadline=None)
+@given(lat1=st.floats(0.0, 1e-4), lat2=st.floats(0.0, 1e-4),
+       algo=st.sampled_from(["ring", "tree", "hierarchical"]))
+def test_monotone_in_per_tier_latency(lat1, lat2, algo):
+    lo, hi = sorted((lat1, lat2))
+    fab = Fabric.cluster(16)
+    c_lo = dataclasses.replace(CONFIG, node_lat_s=lo, ici_lat_s=lo)
+    c_hi = dataclasses.replace(CONFIG, node_lat_s=hi, ici_lat_s=hi)
+    t_lo = collective_time("all_reduce", 16e6, 16, fab, algo=algo,
+                           config=c_lo)
+    t_hi = collective_time("all_reduce", 16e6, 16, fab, algo=algo,
+                           config=c_hi)
+    assert t_lo <= t_hi * (1.0 + REL)

@@ -350,3 +350,105 @@ def test_batched_records_and_best():
     assert empty.records() == [] and len(empty.makespans) == 0
     with pytest.raises(ValueError):
         batched(prog, cfgs, top_k=0).best()
+
+
+# ---------------------------------------------------------------------------
+# collectives in the analytic model: chain exactness, the DAG bracket,
+# and the batched winner on a collective-bearing grid
+
+
+def _collective_chain(dp=4):
+    """Single-stage training chain whose dp gradient all-reduce lowers
+    to ring hops on a single-tier fabric — still chain-shaped, so the
+    analytic fast path must price it bit-identically."""
+    return ir.from_training_step(SMOKE, seq_len=128, batch=4,
+                                 dp_degree=dp,
+                                 fabric=hw.Fabric.single_tier(dp))
+
+
+def test_collective_chain_bit_identical():
+    prog = _collective_chain()
+    assert engine.prepare(prog).is_chain
+    cfgs = [engine.EngineConfig(),
+            engine.EngineConfig(ici_bw=10e9),
+            engine.EngineConfig(ici_lat_s=5e-6),
+            engine.EngineConfig(ici_bw=200e9, ici_lat_s=1e-6,
+                                peak_flops=5e13)]
+    model = CostModel(prog, cfgs[0], backend="numpy")
+    P = np.array([params_from_config(c) for c in cfgs])
+    for got, cfg in zip(model.makespans(P), cfgs):
+        assert float(got) == engine.run(prog, cfg).makespan
+
+
+def test_collective_chain_multi_tier_bit_identical():
+    """A node-tier-spanning ring: the chain fast path must charge the
+    NODE latency/bandwidth fields, not the ici lane."""
+    fab = hw.Fabric.cluster(8)          # 4ici x 2node
+    prog = ir.from_collective("all_reduce", 64e6, 8, fab)
+    assert engine.prepare(prog).is_chain
+    cfgs = [engine.EngineConfig(node_bw=b, node_lat_s=l)
+            for b, l in ((25e9, 0.0), (5e9, 1e-6), (100e9, 4e-6))]
+    model = CostModel(prog, cfgs[0], backend="numpy")
+    P = np.array([params_from_config(c) for c in cfgs])
+    for got, cfg in zip(model.makespans(P), cfgs):
+        exact = engine.run(prog, cfg).makespan
+        assert float(got) == exact
+        # and the node fields actually bite: recompute by hand
+        assert exact == pytest.approx(
+            2 * 7 * (cfg.node_lat_s + (64e6 / 8) / cfg.node_bw),
+            rel=1e-12)
+
+
+def test_dag_bounds_bracket_collectives():
+    """lower <= exact <= upper on DAGs whose collectives run on several
+    parallel lanes (hierarchical sub-group rings)."""
+    fab = hw.Fabric.cluster(16)
+    progs = [
+        ir.from_collective("all_reduce", 64e6, 16, fab,
+                           algo="hierarchical"),
+        ir.Program(
+            list(ir.from_collective("all_reduce", 32e6, (0, 1, 2, 3),
+                                    fab, prefix="a").ops)
+            + list(ir.from_collective("all_reduce", 32e6, (4, 5, 6, 7),
+                                      fab, prefix="b").ops),
+            name="parallel-lanes"),
+    ]
+    cfg = engine.EngineConfig(ici_lat_s=1e-6, n_workers=4)
+    for prog in progs:
+        exact = engine.run(prog, cfg).makespan
+        model = CostModel(prog, cfg, backend="numpy")
+        lo, up = model.bounds(np.array([model.params0]))
+        assert lo[0] <= exact * (1 + 1e-12)
+        assert exact <= up[0] * (1 + 1e-12)
+        assert lo[0] > 0.0
+
+
+def test_batched_winner_matches_exact_on_collective_grid():
+    """sweep.batched over a grid varying the FABRIC rate fields picks the
+    same winner the engine picks (exact on chains)."""
+    fab = hw.Fabric.cluster(8)
+    prog = ir.Program(
+        list(ir.from_training_step(SMOKE, seq_len=128, batch=4).ops)
+        + list(ir.from_collective("all_reduce", 256e6, 8, fab,
+                                  deps=("train/update",),
+                                  prefix="grad").ops),
+        name="train+node-ring")
+    assert engine.prepare(prog).is_chain
+    cfgs = [engine.EngineConfig(node_bw=b, node_lat_s=l)
+            for b in (5e9, 25e9, 100e9) for l in (0.0, 2e-6)]
+    bs = batched(prog, cfgs, top_k=len(cfgs))
+    exact = [engine.run(prog, c).makespan for c in cfgs]
+    assert bs.top(1) == [int(np.argmin(exact))]
+    for v in bs.verified:
+        assert v["analytic_s"] == v["exact_s"]
+
+
+def test_fabric_overrides_are_unsupported_in_the_analytic_model():
+    """Explicit per-tier rates live outside the PARAM_FIELDS vector: the
+    analytic layer must refuse (and the engine still runs them)."""
+    fab = hw.Fabric(tiers=(hw.FabricTier("ici", 8, bandwidth=99e9),))
+    cfg = engine.EngineConfig(fabric=fab)
+    prog = ir.from_collective("all_reduce", 1e6, 8, fab)
+    with pytest.raises(Unsupported):
+        CostModel(prog, cfg, backend="numpy")
+    assert engine.run(prog, cfg).makespan > 0.0

@@ -13,9 +13,9 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 # not ship it; the floor is enforced wherever it is).
 COV_ARGS=""
 if python -c "import pytest_cov" >/dev/null 2>&1; then
-  COV_ARGS="--cov=repro.sim --cov-fail-under=85"
+  COV_ARGS="--cov=repro.sim --cov-fail-under=88"
 else
-  echo "ci: pytest-cov unavailable; coverage floor (repro.sim >= 85%) skipped"
+  echo "ci: pytest-cov unavailable; coverage floor (repro.sim >= 88%) skipped"
 fi
 
 if [[ "${1:-}" == "--fast" ]]; then
@@ -63,5 +63,11 @@ python -m benchmarks.bench_training --quick
 # headline, and the bit-identity (replay == full co-simulation) +
 # router-conservation probes (recorded speedup floor >= 10x)
 python -m benchmarks.bench_fleet --quick
+
+# cluster smoke: the DP x TP x PP fabric grid within 2x of its
+# BENCH_cluster.json budget + the collective probes (engine == closed-form
+# ring/tree/hierarchical bounds at rel 1e-12, hierarchical <= ring on the
+# multi-tier fabric, single-tier fabric bit-identical to the flat config)
+python -m benchmarks.bench_cluster --quick
 
 echo "CI OK"
