@@ -56,6 +56,50 @@ def _rel(a: float, b: float) -> float:
     return abs(a - b) / max(abs(a), abs(b), 1e-300)
 
 
+# -- compact artifact format -------------------------------------------------
+# the grid dominates the artifact (hundreds of cells x ~25 columns); it is
+# committed columnar ({"columns": [...], "rows": [[...], ...]}) with floats
+# rounded to 6 significant digits and one row per line, which shrinks the
+# file ~8x without losing anything a reader of the study needs.  The
+# correctness probes (bounds / identities) keep full precision.
+
+
+def _round6(v):
+    if isinstance(v, float) and not v.is_integer():
+        return float(f"{v:.6g}")
+    return v
+
+
+def _to_columnar(recs):
+    cols = list(recs[0]) if recs else []
+    return {"columns": cols,
+            "rows": [[_round6(r[c]) for c in cols] for r in recs]}
+
+
+def grid_records(doc):
+    """Decode a BENCH_cluster.json ``cluster_grid`` back to row dicts
+    (accepts both the columnar and the legacy list-of-dicts form)."""
+    g = doc["cluster_grid"]
+    if isinstance(g, list):
+        return g
+    cols = g["columns"]
+    return [dict(zip(cols, r)) for r in g["rows"]]
+
+
+def _compact_json(out) -> str:
+    """indent=2 everywhere except the grid rows, which go one per line."""
+    head = {k: v for k, v in out.items() if k != "cluster_grid"}
+    txt = json.dumps(head, indent=2)
+    g = out["cluster_grid"]
+    rows = ",\n      ".join(json.dumps(r, separators=(",", ":"))
+                            for r in g["rows"])
+    grid_txt = ('"cluster_grid": {\n'
+                f'    "columns": {json.dumps(g["columns"])},\n'
+                f'    "rows": [\n      {rows}\n    ]\n  }}')
+    assert txt.endswith("\n}")
+    return txt[:-2] + ",\n  " + grid_txt + "\n}\n"
+
+
 def _grid(full: bool):
     """The placement grid rows for every model, with speedup columns."""
     grid = FULL_GRID if full else QUICK_GRID
@@ -284,6 +328,7 @@ def main():
         return
     if failed:
         sys.exit(1)
+    out["cluster_grid"] = _to_columnar(out["cluster_grid"])
     out["recorded"] = time.strftime("%Y-%m-%d")
     out["note"] = ("DP x TP x PP placement grid over the hierarchical "
                    "cluster fabric (8-512 accelerators, ring / tree / "
@@ -292,7 +337,7 @@ def main():
                    "collective bound / hier<=ring / single-tier identity "
                    "probes; budget_s feeds the tools/ci.sh --quick 2x "
                    "gate")
-    BENCH_JSON.write_text(json.dumps(out, indent=2) + "\n")
+    BENCH_JSON.write_text(_compact_json(out))
     print(f"wrote {BENCH_JSON}")
 
 

@@ -2,7 +2,11 @@
 
 Prints ``name,us_per_call,derived`` CSV per the harness convention.
 
-  PYTHONPATH=src python -m benchmarks.run [--only NAME]
+  PYTHONPATH=src python -m benchmarks.run [--only NAME] [--profile]
+
+``--profile`` wraps the selected modules in cProfile and prints the
+top-20 functions by cumulative time to stderr — the standing answer to
+"where does the wall go" when tuning the engine hot paths.
 """
 import argparse
 import importlib
@@ -33,14 +37,11 @@ MODULES = [
 ]
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None)
-    args = ap.parse_args()
+def _run_modules(only) -> int:
     failures = 0
     print("name,us_per_call,derived")
     for mod_name, title in MODULES:
-        if args.only and args.only != mod_name:
+        if only and only != mod_name:
             continue
         print(f"# === bench_{mod_name}: {title} ===", flush=True)
         try:
@@ -51,6 +52,32 @@ def main() -> None:
         except Exception:  # noqa: BLE001
             failures += 1
             traceback.print_exc()
+    return failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--profile", action="store_true",
+                    help="cProfile the selected benchmarks; print the "
+                         "top-20 cumulative-time functions to stderr")
+    args = ap.parse_args()
+    if args.profile:
+        import cProfile
+        import io
+        import pstats
+        prof = cProfile.Profile()
+        prof.enable()
+        try:
+            failures = _run_modules(args.only)
+        finally:
+            prof.disable()
+            buf = io.StringIO()
+            (pstats.Stats(prof, stream=buf)
+             .sort_stats("cumulative").print_stats(20))
+            print(buf.getvalue(), file=sys.stderr, flush=True)
+    else:
+        failures = _run_modules(args.only)
     if failures:
         sys.exit(1)
 

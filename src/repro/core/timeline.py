@@ -27,12 +27,21 @@ class Event:
 @dataclass
 class Timeline:
     events: List[Event] = field(default_factory=list)
+    # set by the engine once a run's events are final (the makespan fold
+    # is O(events) and every post-run metric asks for it); ``add``
+    # invalidates it, so incrementally-built timelines stay correct
+    _mk_cache: Optional[float] = field(default=None, repr=False,
+                                       compare=False)
 
     def add(self, worker, name, start, duration, kind="compute", phase=""):
+        self._mk_cache = None
         self.events.append(Event(worker, name, start, duration, kind, phase))
 
     @property
     def makespan(self) -> float:
+        mk = self._mk_cache
+        if mk is not None:
+            return mk
         return max((e.end for e in self.events), default=0.0)
 
     def utilization(self, worker: Optional[str] = None) -> float:

@@ -379,34 +379,311 @@ class EngineResult:
 
 
 @dataclass
+class CompiledPlan:
+    """Typed-array (structure-of-arrays) compilation of a ``Plan``.
+
+    Everything schedule- and config-independent the event loop needs,
+    resolved to integer indices and flat Python/numpy arrays once per
+    program: dependency/consumer index lists, per-op static columns,
+    precomputed event-name strings, and the **linear-run tables** of the
+    fusion layer — ``run_next[i] = j`` marks a contractible hop link
+    (op ``i`` is a fabric hop whose sole consumer ``j`` is a fabric hop
+    depending only on ``i``, both LPT-neutral), so a ready wave made
+    entirely of run heads can be advanced many rounds at a time without
+    touching the heap (see ``_run_events_fused``).  Built lazily by
+    ``Plan.compiled()`` and reused across every config of a sweep."""
+    names: List[str]
+    op_list: List[CostedOp]
+    deps_idx: List[Tuple[int, ...]]
+    consumers_idx: List[Tuple[int, ...]]
+    n_waiting0: List[int]
+    roots_idx: List[int]
+    is_tier: List[bool]
+    lane_code: List[int]            # -1 when the op never touches a lane
+    lane_names: List[str]
+    phase_l: List[str]
+    affinity_l: List[Optional[str]]
+    dclass_l: List[str]
+    coll_l: List[float]
+    run_next: List[int]             # -1 = not a contractible link
+    run_len: List[int]
+    n_run_interior: int
+    any_tier: bool
+    # ops that need the compute/transfer/host price tables: every
+    # non-tier op, plus any hop op with an explicit flops/duration (its
+    # heap priority).  Plain hops (the overwhelming bulk of cluster
+    # programs) price as exact zeros, so the per-config hoist only
+    # touches the priced subset and numpy-scatters into full columns.
+    priced_idx: object              # np.int64 indices into op_list
+    # per-tier (np indices, hops, collective_bytes) for vectorized cdur
+    tier_groups: Dict[str, tuple]
+    aff_counts: Dict[str, int]
+    n_unrestricted0: int
+    _hoist: Optional[object] = field(default=None, repr=False)
+    _evnames: Optional[tuple] = field(default=None, repr=False)
+
+    def event_names(self) -> tuple:
+        """Precompiled ``:coll``/``:dispatch``/``:xfer`` event-name
+        columns (one string concat per op per run otherwise)."""
+        ev = self._evnames
+        if ev is None:
+            nm = self.names
+            ev = self._evnames = ([s + ":coll" for s in nm],
+                                  [s + ":dispatch" for s in nm],
+                                  [s + ":xfer" for s in nm])
+        return ev
+
+    def hoist_arrays(self):
+        """Columnar cost inputs of the **priced** ops (``costmodel.
+        OpArrays`` without the tier gating — the fused loop prices hops
+        separately), built on first use and shared by every config's
+        vectorized cost hoist."""
+        a = self._hoist
+        if a is None:
+            import numpy as np
+
+            from repro.sim import costmodel
+            ops = [self.op_list[i] for i in self.priced_idx.tolist()]
+            m = len(ops)
+            a = costmodel.OpArrays(
+                m=m,
+                flops=np.fromiter((op.flops for op in ops),
+                                  np.float64, m),
+                dot=np.fromiter((op.dot_flops for op in ops),
+                                np.float64, m),
+                nb=np.fromiter((op.bytes_in + op.bytes_out for op in ops),
+                               np.float64, m),
+                coll=np.zeros(m, dtype=np.float64),
+                has_dur=np.fromiter((op.duration_s is not None
+                                     for op in ops), bool, m),
+                dur=np.fromiter((op.duration_s or 0.0 for op in ops),
+                                np.float64, m),
+                has_tov=np.fromiter((op.transfer_s is not None
+                                     for op in ops), bool, m),
+                tov=np.fromiter((op.transfer_s or 0.0 for op in ops),
+                                np.float64, m))
+            self._hoist = a
+        return a
+
+
+@dataclass
 class Plan:
     """Schedule-independent structure of a ``Program``.
 
     ``prepare()`` derives it once; ``run(..., plan=...)`` and the sweep
     layer then reuse it across every config instead of rebuilding the
-    ops/consumers/n_waiting dicts per run."""
+    ops/consumers/n_waiting dicts per run.  ``compiled()`` lazily lowers
+    it to the typed-array form the fused event core executes."""
     ops: Dict[str, CostedOp]
-    n_waiting: Dict[str, int]
-    consumers: Dict[str, Tuple[str, ...]]
     roots: List[str]
     is_chain: bool
     totals: Dict[str, float] = field(default_factory=dict)
+    _compiled: Optional[CompiledPlan] = field(default=None, repr=False,
+                                              compare=False)
+    # name-keyed dependency maps, built lazily: only the legacy dict
+    # event loop walks them — the fused core uses the integer-indexed
+    # ``CompiledPlan`` columns instead
+    _n_waiting: Optional[Dict[str, int]] = field(default=None, repr=False,
+                                                 compare=False)
+    _consumers: Optional[Dict[str, Tuple[str, ...]]] = field(
+        default=None, repr=False, compare=False)
+
+    def _dep_maps(self) -> None:
+        ops = self.ops
+        n_waiting: Dict[str, int] = {}
+        consumers_l: Dict[str, List[str]] = {}
+        for nm, op in ops.items():
+            nw = 0
+            for d in op.deps:
+                if d in ops:
+                    nw += 1
+                    lst = consumers_l.get(d)
+                    if lst is None:
+                        consumers_l[d] = [nm]
+                    else:
+                        lst.append(nm)
+            n_waiting[nm] = nw
+        self._n_waiting = n_waiting
+        self._consumers = {k: tuple(v) for k, v in consumers_l.items()}
+
+    @property
+    def n_waiting(self) -> Dict[str, int]:
+        if self._n_waiting is None:
+            self._dep_maps()
+        return self._n_waiting
+
+    @property
+    def consumers(self) -> Dict[str, Tuple[str, ...]]:
+        if self._consumers is None:
+            self._dep_maps()
+        return self._consumers
+
+    def compiled(self) -> CompiledPlan:
+        cp = self._compiled
+        if cp is None:
+            cp = self._compiled = _compile_plan(self)
+        return cp
 
 
 def prepare(program: Program) -> Plan:
-    ops = {op.name: op for op in program.ops}
-    n_waiting = {op.name: sum(1 for d in op.deps if d in ops)
-                 for op in program.ops}
-    consumers_l: Dict[str, List[str]] = {}
+    ops: Dict[str, CostedOp] = {}
+    for op in program.ops:
+        ops[op.name] = op
+    # a root has no dep that resolves in-program; the full name-keyed
+    # dependency maps are built lazily on the Plan (dict-loop only)
+    roots = []
     for op in program.ops:
         for d in op.deps:
             if d in ops:
-                consumers_l.setdefault(d, []).append(op.name)
-    roots = [op.name for op in program.ops if n_waiting[op.name] == 0]
-    return Plan(ops=ops, n_waiting=n_waiting,
-                consumers={k: tuple(v) for k, v in consumers_l.items()},
-                roots=roots, is_chain=_is_chain(program, ops),
+                break
+        else:
+            roots.append(op.name)
+    return Plan(ops=ops, roots=roots, is_chain=_is_chain(program, ops),
                 totals=program.totals())
+
+
+def _compile_plan(plan: Plan) -> CompiledPlan:
+    import numpy as np
+
+    names = list(plan.ops)
+    op_list = list(plan.ops.values())
+    n = len(op_list)
+    index = dict(zip(names, range(n)))
+    ig = index.get
+    empty = ()
+    # pass 1: dependency + consumer index lists in one sweep (single-dep
+    # ops — the overwhelmingly common case — take the scalar fast path)
+    deps_idx: List[Tuple[int, ...]] = [empty] * n
+    cons_lists: List[Optional[List[int]]] = [None] * n
+    for i, op in enumerate(op_list):
+        ds = op.deps
+        if not ds:
+            continue
+        if len(ds) == 1:
+            j = ig(ds[0])
+            if j is None:
+                continue
+            deps_idx[i] = (j,)
+            lst = cons_lists[j]
+            if lst is None:
+                cons_lists[j] = [i]
+            else:
+                lst.append(i)
+        else:
+            t = tuple(j for j in map(ig, ds) if j is not None)
+            deps_idx[i] = t
+            for j in t:
+                lst = cons_lists[j]
+                if lst is None:
+                    cons_lists[j] = [i]
+                else:
+                    lst.append(i)
+    consumers_idx: List[Tuple[int, ...]] = [
+        lst if lst is not None else empty for lst in cons_lists]
+    n_waiting0 = [len(ds) for ds in deps_idx]
+    roots_idx = [index[nm] for nm in plan.roots]
+
+    tier_l = [op.tier for op in op_list]
+    is_tier = [t is not None for t in tier_l]
+    any_tier = True in is_tier
+    coll_l = [op.collective_bytes for op in op_list]
+    affinity_l = [op.affinity for op in op_list]
+
+    # pass 2: per-op static columns (tier groups / lanes / priced subset /
+    # affinity counts) fused with the linear-run link detection — a link
+    # i -> j is contractible when finishing i readies exactly j (sole
+    # consumer, j's only in-program dep) and both ends are LPT-neutral
+    # fabric hops (flops == 0, no duration override: their heap priority
+    # is exactly 0.0 under every config, so a wave of run heads drains in
+    # pure seq — i.e. round-robin — order)
+    lane_code = [-1] * n
+    lane_names: List[str] = []
+    lane_idx: Dict[str, int] = {}
+    tier_groups_l: Dict[str, tuple] = {}
+    priced: List[int] = []
+    priced_append = priced.append
+    aff_counts: Dict[str, int] = {}
+    for a in affinity_l:
+        if a is not None:
+            aff_counts[a] = aff_counts.get(a, 0) + 1
+    run_next = [-1] * n
+    run_len = [1] * n
+    has_prev = [False] * n
+    n_run_interior = 0
+    for i, op in enumerate(op_list):
+        t = tier_l[i]
+        if t is not None:
+            g = tier_groups_l.get(t)
+            if g is None:
+                g = tier_groups_l[t] = ([], [], [])
+            g[0].append(i)
+            g[1].append(op.hops)
+            g[2].append(coll_l[i])
+            if op.flops != 0.0 or op.duration_s is not None:
+                priced_append(i)
+            else:
+                cons = consumers_idx[i]
+                if len(cons) == 1:
+                    j = cons[0]
+                    oj = op_list[j]
+                    if (tier_l[j] is not None and oj.flops == 0.0
+                            and oj.duration_s is None
+                            and len(deps_idx[j]) == 1):
+                        run_next[i] = j
+                        has_prev[j] = True
+        else:
+            priced_append(i)
+            if coll_l[i] <= 0.0:
+                continue
+        lane = op.lane
+        lc = lane_idx.get(lane)
+        if lc is None:
+            lc = lane_idx[lane] = len(lane_names)
+            lane_names.append(lane)
+        lane_code[i] = lc
+    if any_tier:
+        for i in range(n):
+            if has_prev[i] or run_next[i] < 0:
+                continue
+            chain = [i]
+            j = run_next[i]
+            while j >= 0:
+                chain.append(j)
+                j = run_next[j]
+            L = len(chain)
+            n_run_interior += L - 1
+            for k, ci in enumerate(chain):
+                run_len[ci] = L - k
+    tier_groups = {
+        t: (np.array(idxs, dtype=np.int64),
+            np.array(hops, dtype=np.float64),
+            np.array(cb, dtype=np.float64))
+        for t, (idxs, hops, cb) in tier_groups_l.items()}
+    return CompiledPlan(
+        names=names, op_list=op_list, deps_idx=deps_idx,
+        consumers_idx=consumers_idx, n_waiting0=n_waiting0,
+        roots_idx=roots_idx, is_tier=is_tier, lane_code=lane_code,
+        lane_names=lane_names, phase_l=[op.phase for op in op_list],
+        affinity_l=affinity_l,
+        dclass_l=[op.device_class for op in op_list], coll_l=coll_l,
+        run_next=run_next, run_len=run_len,
+        n_run_interior=n_run_interior, any_tier=any_tier,
+        priced_idx=np.array(priced, dtype=np.int64),
+        tier_groups=tier_groups, aff_counts=aff_counts,
+        n_unrestricted0=n)
+
+
+def fusion_resolvable(plan: Plan, max_segments: int = 512) -> bool:
+    """True when linear-run fusion contracts ``plan`` into a small
+    segment graph: the program is a DAG with at least one contractible
+    hop run, and the surviving inter-segment structure (ops minus run
+    interiors) stays under ``max_segments`` events.  For such programs
+    ``sweep.batched`` prices the grid with the exact fused engine —
+    the DAG relaxation bracket collapses to zero width."""
+    cp = plan.compiled()
+    if plan.is_chain or cp.n_run_interior == 0:
+        return False
+    return len(cp.op_list) - cp.n_run_interior <= max_segments
 
 
 def _is_chain(program: Program, ops: Dict[str, CostedOp]) -> bool:
@@ -488,8 +765,8 @@ def chain_op_costs(op: CostedOp, config: EngineConfig
 
 def run(program: Program, config: Optional[EngineConfig] = None, *,
         model_flops: float = 0.0, host_s: Optional[float] = None,
-        plan: Optional[Plan] = None, fast: Optional[bool] = None
-        ) -> EngineResult:
+        plan: Optional[Plan] = None, fast: Optional[bool] = None,
+        fuse: Optional[bool] = None) -> EngineResult:
     """Simulate ``program`` on ``config``; returns every metric of the run.
 
     ``config``: ``None`` means a fresh default ``EngineConfig()`` (a
@@ -499,6 +776,10 @@ def run(program: Program, config: Optional[EngineConfig] = None, *,
     ``plan``: precomputed ``prepare(program)`` (sweep layer shares it).
     ``fast``: force (True) or forbid (False) the linear-chain prefix-sum
     path; default auto-detects.  Both paths are bit-identical.
+    ``fuse``: force (False) the legacy dict-based event loop instead of
+    the compiled typed-array core with linear-run fusion; the default
+    (None/True) uses the compiled core.  Both are bit-identical — the
+    dict loop is kept as the anchor the fused core is asserted against.
     """
     if config is None:
         config = EngineConfig()
@@ -527,8 +808,17 @@ def run(program: Program, config: Optional[EngineConfig] = None, *,
             return _finalize(tl, program, config, topo, plan,
                              iface_time_total, transfer_energy, model_flops,
                              host_floor, makespan=makespan, kinds=kinds)
-    tl, iface_time_total, transfer_energy = _run_events(
-        program, config, plan, topo)
+    if fuse is None:
+        # the compiled core carries ~50us of per-run setup (local array
+        # binds, column views); below a few dozen ops the dict loop wins.
+        # Both paths are bit-identical, so this is purely a perf choice.
+        fuse = len(program.ops) >= 32
+    if fuse:
+        tl, iface_time_total, transfer_energy = _run_events_fused(
+            program, config, plan, topo)
+    else:
+        tl, iface_time_total, transfer_energy = _run_events(
+            program, config, plan, topo)
     return _finalize(tl, program, config, topo, plan, iface_time_total,
                      transfer_energy, model_flops, host_floor)
 
@@ -816,6 +1106,411 @@ def _run_events(program: Program, config: EngineConfig, plan: Plan,
     return tl, iface_time_total, transfer_energy
 
 
+def _run_events_fused(program: Program, config: EngineConfig, plan: Plan,
+                      topo: SoCTopology) -> Tuple[Timeline, float, float]:
+    """Compiled event core: the same schedule as ``_run_events``, executed
+    over the typed-array ``CompiledPlan`` instead of per-op dicts.
+
+    Two throughput layers, both bit-identical by construction:
+
+    * **typed-array core** — all per-op structure is integer-indexed
+      (``deps_idx``/``consumers_idx``/static columns), per-op costs are
+      hoisted as vectors (``costmodel.chain_terms`` on the compiled
+      columnar arrays when the single-signature analytic model applies,
+      a scalar sweep otherwise), and event-name strings are precompiled,
+      so the heap loop touches flat lists only;
+
+    * **linear-run fusion** — whenever a ready wave consists entirely of
+      linear-run heads (LPT-neutral fabric hops, priority exactly 0.0,
+      each readying exactly its chain successor), heap pops provably
+      drain in seq order — round-robin across the chains in wave entry
+      order.  The blast replays ``min(run length) - 1`` full rounds in a
+      tight loop (no heap traffic, no consumer bookkeeping), emitting
+      events in exactly the order the heap would have, then re-enters the
+      surviving chain suffixes as an already-valid heap.  Ring/tree/
+      hierarchical collective ladders — the bulk of cluster programs —
+      collapse from O(E log E) heap churn to a linear event append.
+    """
+    cp = plan.compiled()
+    op_list = cp.op_list
+    n = len(op_list)
+    tl = Timeline()
+    events_append = tl.events.append
+
+    worker_names, dev_sig, sig_cfgs, link_of_dev, ports_l, devs_on_link \
+        = _resolve(config, topo)
+    avail = [0.0] * len(topo.devices)
+    affinity_worker: Dict[str, int] = {}
+    done_l = [0.0] * n
+    host_free = 0.0
+    lane_free_l = [0.0] * len(cp.lane_names)
+    transfer_energy = 0.0
+    iface_time_total = 0.0
+    nlinks = len(ports_l)
+
+    # per-op fabric hop durations, vectorized per tier (lat/bw are Python
+    # floats, so the elementwise float64 math is the scalar math; the
+    # per-tier results numpy-scatter into one full column)
+    cdur_l: List[float] = []
+    if cp.any_tier:
+        import numpy as np
+        with np.errstate(divide="ignore", invalid="ignore"):
+            cdur_a = np.zeros(n, dtype=np.float64)
+            for tname, (idxs, hops_a, coll_a) in cp.tier_groups.items():
+                lat, bw = hw.resolve_tier_params(config, tname)
+                cdur_a[idxs] = hops_a * lat + coll_a / bw
+        cdur_l = cdur_a.tolist()
+
+    cand: Dict[str, Tuple[int, ...]] = {}
+    for c in cp.dclass_l:
+        if c not in cand:
+            cand[c] = _cand_cached(topo, c)
+    ref_sig = {c: dev_sig[idxs[0]] for c, idxs in cand.items()}
+
+    # hoisted per-op cost tables as flat full-size lists keyed by op
+    # index; only the priced subset is ever computed (plain hops price as
+    # exact zeros — the scatter default).  Single signature + analytic
+    # interface + stock energy model: one vectorized ``chain_terms``
+    # evaluation over the priced columns replaces the per-op scalar sweep
+    # (same formulas, operation order and IEEE semantics).
+    host_dispatch = config.host_dispatch_s
+    host_bw = config.host_bw
+    host_threads = config.host_threads
+    multi = len(sig_cfgs) > 1
+    comp_sig: List[Optional[list]] = []
+    xfer_sig: List[Optional[list]] = []
+    if not multi:
+        eff0 = sig_cfgs[0]
+        from repro.sim import costmodel
+        if (n and eff0.interface in costmodel.CHAIN_INTERFACES
+                and type(config.energy) is EnergyModel
+                and type(eff0.energy) is EnergyModel):
+            import numpy as np
+            terms = costmodel.chain_terms(
+                cp.hoist_arrays(),
+                costmodel.ChainParams.from_engine(config, eff0, ports_l[0]))
+            pidx = cp.priced_idx
+            comp_a = np.zeros(n, dtype=np.float64)
+            comp_a[pidx] = terms.comp
+            comp_l: List[float] = comp_a.tolist()
+            full_a = np.zeros(n, dtype=np.float64)
+            full_a[pidx] = terms.full
+            full_l: List[float] = full_a.tolist()
+            expo_a = np.zeros(n, dtype=np.float64)
+            expo_a[pidx] = terms.expo
+            expo_l: List[float] = expo_a.tolist()
+            xe_a = np.zeros(n, dtype=np.float64)
+            xe_a[pidx] = terms.xe
+            xe_l: List[float] = xe_a.tolist()
+            hc_a = np.zeros(n, dtype=np.float64)
+            hc_a[pidx] = terms.hc
+            hc_l: List[float] = hc_a.tolist()
+        else:
+            iface0 = INTERFACES[eff0.interface]
+            peak0 = eff0.peak_flops
+            comp_l = [0.0] * n
+            full_l = [0.0] * n
+            expo_l = [0.0] * n
+            xe_l = [0.0] * n
+            hc_l = [0.0] * n
+            for i in cp.priced_idx.tolist():
+                op = op_list[i]
+                comp_l[i] = (op.duration_s if op.duration_s is not None
+                             else op.flops / peak0)
+                full_l[i], expo_l[i], xe_l[i] = _transfer_base(op, eff0,
+                                                               iface0)
+                hc_l[i] = host_dispatch + (
+                    op.bytes / host_bw / host_threads if host_bw else 0.0)
+    else:
+        class_sigs = {c: frozenset(dev_sig[w] for w in idxs)
+                      for c, idxs in cand.items()}
+        aff_classes: Dict[str, set] = {}
+        for i, a in enumerate(cp.affinity_l):
+            if a is not None:
+                aff_classes.setdefault(a, set()).add(cp.dclass_l[i])
+        comp_sig = [None] * len(sig_cfgs)
+        xfer_sig = [None] * len(sig_cfgs)
+        sig_iface = [INTERFACES[c.interface] for c in sig_cfgs]
+        sig_peak = [c.peak_flops for c in sig_cfgs]
+        for i, op in enumerate(op_list):
+            op_sigs = class_sigs[op.device_class]
+            if (op.affinity is not None
+                    and len(aff_classes[op.affinity]) > 1):
+                op_sigs = frozenset().union(
+                    *(class_sigs[c] for c in aff_classes[op.affinity]))
+            dur = op.duration_s
+            for si in op_sigs:
+                if comp_sig[si] is None:
+                    comp_sig[si] = [0.0] * n
+                    xfer_sig[si] = [None] * n
+                comp_sig[si][i] = (dur if dur is not None
+                                   else op.flops / sig_peak[si])
+                xfer_sig[si][i] = _transfer_base(op, sig_cfgs[si],
+                                                 sig_iface[si])
+        hc_l = [host_dispatch
+                + (op.bytes / host_bw / host_threads
+                   if host_bw else 0.0) for op in op_list]
+
+    # contention structures + expiry bookkeeping: identical to the dict
+    # loop (see its comments for the semantics)
+    xfer_starts: List[List[float]] = [[] for _ in range(nlinks)]
+    xfer_ends: List[List[float]] = [[] for _ in range(nlinks)]
+    window_heap: List[List[Tuple[float, float]]] = [[] for _ in
+                                                    range(nlinks)]
+    compact_at = [64] * nlinks
+    aff_remaining = dict(cp.aff_counts)
+    n_unrestricted = cp.n_unrestricted0
+
+    def _expiry_bound(li: int) -> float:
+        dl = devs_on_link[li]
+        if n_unrestricted > 0:
+            return min(avail[w] for w in dl)
+        live_workers = set()
+        for k, c in aff_remaining.items():
+            if c > 0:
+                pinned = affinity_worker.get(k)
+                if pinned is None:
+                    return min(avail[w] for w in dl)
+                if link_of_dev[pinned] == li:
+                    live_workers.add(pinned)
+        if not live_workers:
+            return float("inf")
+        return min(avail[w] for w in live_workers)
+
+    if not multi:
+        _prio = comp_l.__getitem__
+    else:
+        def _prio(i: int) -> float:
+            return comp_sig[ref_sig[cp.dclass_l[i]]][i]
+
+    names = cp.names
+    coll_nm, disp_nm, xfer_nm = cp.event_names()
+    _E = Event
+    _new = object.__new__
+    deps_idx = cp.deps_idx
+    consumers_idx = cp.consumers_idx
+    n_waiting = list(cp.n_waiting0)
+    is_tier = cp.is_tier
+    lane_code = cp.lane_code
+    lane_names = cp.lane_names
+    phase_l = cp.phase_l
+    affinity_l = cp.affinity_l
+    dclass_l = cp.dclass_l
+    coll_l = cp.coll_l
+    run_next = cp.run_next
+    run_len = cp.run_len
+    any_tier = cp.any_tier
+    ici_bw = config.ici_bw
+
+    # same wave semantics as the dict loop, restructured so the swap (and
+    # the blast check) happens once, at the top — the initial root wave
+    # enters through the same gate
+    heap: List[Tuple[float, int, int]] = []
+    next_wave = [(-_prio(i), k, i) for k, i in enumerate(cp.roots_idx)]
+    next_wave_append = next_wave.append
+    seq = len(next_wave)
+    scheduled = 0
+
+    while True:
+        if not heap:
+            if not next_wave:
+                break
+            heap = next_wave
+            next_wave = []
+            next_wave_append = next_wave.append
+            heapify(heap)
+            if any_tier:
+                # linear-run blast: every wave entry a run head with the
+                # same (necessarily 0.0) priority -> pops drain in pure
+                # seq order, round-robin across the chains.  Replay
+                # min(runlen)-1 full rounds without touching the heap.
+                base = heap[0][0]
+                min_rl = n
+                ok = True
+                for e in heap:
+                    rl = run_len[e[2]]
+                    if rl < 2 or e[0] != base:
+                        ok = False
+                        break
+                    if rl < min_rl:
+                        min_rl = rl
+                if ok:
+                    entries = sorted(heap)
+                    k = len(entries)
+                    rounds = min_rl - 1
+                    heads = [e[2] for e in entries]
+                    cready = []
+                    for i in heads:
+                        ds = deps_idx[i]
+                        dr = 0.0
+                        if ds:
+                            dr = done_l[ds[0]]
+                            for di in range(1, len(ds)):
+                                v = done_l[ds[di]]
+                                if v > dr:
+                                    dr = v
+                        cready.append(dr)
+                    for _ in range(rounds):
+                        for j in range(k):
+                            i = heads[j]
+                            lc = lane_code[i]
+                            cdur = cdur_l[i]
+                            lf = lane_free_l[lc]
+                            dr = cready[j]
+                            c0 = lf if lf > dr else dr
+                            ev = _new(_E)
+                            ev.__dict__ = {
+                                "worker": lane_names[lc],
+                                "name": coll_nm[i], "start": c0,
+                                "duration": cdur,
+                                "kind": "collective",
+                                "phase": phase_l[i]}
+                            events_append(ev)
+                            end = c0 + cdur
+                            lane_free_l[lc] = end
+                            cready[j] = end
+                            heads[j] = run_next[i]
+                    n_unrestricted -= rounds * k
+                    scheduled += rounds * k
+                    heap = []
+                    for j in range(k):
+                        i = heads[j]
+                        # the new head's sole dep is its chain's last
+                        # blasted op; equal priorities + ascending seq
+                        # make the rebuilt list an already-valid heap
+                        done_l[deps_idx[i][0]] = cready[j]
+                        heap.append((base, seq, i))
+                        seq += 1
+        _, _, i = heappop(heap)
+        ds = deps_idx[i]
+        dep_ready = 0.0
+        if ds:
+            dep_ready = done_l[ds[0]]
+            for di in range(1, len(ds)):
+                v = done_l[ds[di]]
+                if v > dep_ready:
+                    dep_ready = v
+        if is_tier[i]:
+            cdur = cdur_l[i]
+            lc = lane_code[i]
+            lf = lane_free_l[lc]
+            c0 = lf if lf > dep_ready else dep_ready
+            ev = _new(_E)
+            ev.__dict__ = {"worker": lane_names[lc], "name": coll_nm[i],
+                           "start": c0, "duration": cdur,
+                           "kind": "collective", "phase": phase_l[i]}
+            events_append(ev)
+            end = c0 + cdur
+            lane_free_l[lc] = end
+            done_l[i] = end
+            n_unrestricted -= 1
+            scheduled += 1
+            for ci in consumers_idx[i]:
+                nw = n_waiting[ci] - 1
+                n_waiting[ci] = nw
+                if not nw:
+                    next_wave_append((-_prio(ci), seq, ci))
+                    seq += 1
+            continue
+        aff = affinity_l[i]
+        cds = cand[dclass_l[i]]
+        if aff is not None and aff in affinity_worker:
+            w = affinity_worker[aff]
+            aff_remaining[aff] -= 1
+        else:
+            w = cds[0] if len(cds) == 1 else min(cds,
+                                                 key=avail.__getitem__)
+            if aff is not None:
+                affinity_worker[aff] = w
+                n_unrestricted -= aff_remaining[aff]
+                aff_remaining[aff] -= 1
+            else:
+                n_unrestricted -= 1
+        si = dev_sig[w]
+        aw = avail[w]
+        t = aw if aw > dep_ready else dep_ready
+        host_cost = hc_l[i]
+        if host_cost > 0.0:
+            h0 = host_free if host_free > dep_ready else dep_ready
+            ev = _new(_E)
+            ev.__dict__ = {"worker": "host", "name": disp_nm[i],
+                           "start": h0, "duration": host_cost,
+                           "kind": "host", "phase": phase_l[i]}
+            events_append(ev)
+            host_free = h0 + host_cost
+            if host_free > t:
+                t = host_free
+        if multi:
+            full, xfer, xe = xfer_sig[si][i]
+        else:
+            full = full_l[i]
+            xfer = expo_l[i]
+            xe = xe_l[i]
+        transfer_energy += xe
+        if xfer > 0.0:
+            li = link_of_dev[w]
+            ports = ports_l[li]
+            if ports <= 0:
+                factor = 1.0
+            else:
+                live = (1 + bisect_right(xfer_starts[li], t)
+                        - bisect_right(xfer_ends[li], t))
+                factor = max(1.0, live / ports)
+            xfer *= factor
+            ev = _new(_E)
+            ev.__dict__ = {"worker": worker_names[w], "name": xfer_nm[i],
+                           "start": t, "duration": xfer,
+                           "kind": "transfer", "phase": phase_l[i]}
+            events_append(ev)
+            end = t + xfer
+            insort(xfer_starts[li], t)
+            insort(xfer_ends[li], end)
+            heappush(window_heap[li], (end, t))
+            if len(window_heap[li]) >= compact_at[li]:
+                bound = _expiry_bound(li)
+                wh = window_heap[li]
+                while wh and wh[0][0] <= bound:
+                    heappop(wh)
+                xfer_starts[li] = sorted(s for (_, s) in wh)
+                xfer_ends[li] = sorted(e for (e, _) in wh)
+                compact_at[li] = max(64, 2 * len(wh))
+            iface_time_total += full * factor
+            t = end
+        else:
+            iface_time_total += full
+        comp = comp_sig[si][i] if multi else comp_l[i]
+        ev = _new(_E)
+        ev.__dict__ = {"worker": worker_names[w], "name": names[i],
+                       "start": t, "duration": comp,
+                       "kind": "compute", "phase": phase_l[i]}
+        events_append(ev)
+        t += comp
+        avail[w] = t
+        if coll_l[i] > 0.0:
+            lc = lane_code[i]
+            lf = lane_free_l[lc]
+            c0 = lf if lf > t else t
+            cdur = coll_l[i] / ici_bw
+            ev = _new(_E)
+            ev.__dict__ = {"worker": lane_names[lc], "name": coll_nm[i],
+                           "start": c0, "duration": cdur,
+                           "kind": "collective", "phase": phase_l[i]}
+            events_append(ev)
+            lane_free_l[lc] = c0 + cdur
+            t = c0 + cdur
+        done_l[i] = t
+        scheduled += 1
+        for ci in consumers_idx[i]:
+            nw = n_waiting[ci] - 1
+            n_waiting[ci] = nw
+            if not nw:
+                next_wave_append((-_prio(ci), seq, ci))
+                seq += 1
+    if scheduled != len(program.ops):
+        raise ValueError("dependency cycle in program")
+    return tl, iface_time_total, transfer_energy
+
+
 # ---------------------------------------------------------------------------
 # linear-chain fast path: the whole schedule is one prefix sum
 
@@ -980,17 +1675,31 @@ def _finalize(tl: Timeline, program: Program, config: EngineConfig,
               transfer_energy: float, model_flops: float,
               host_floor: float, *, makespan: Optional[float] = None,
               kinds: Optional[Dict[str, float]] = None) -> EngineResult:
-    if makespan is None:
-        makespan = tl.makespan
     totals = plan.totals if plan.totals else program.totals()
     if kinds is None:
-        bd = report.breakdown_from_events(tl.events, host_floor_s=host_floor)
-    else:
-        bd = report.Breakdown(
-            accelerator_s=kinds.get("compute", 0.0),
-            transfer_s=kinds.get("transfer", 0.0),
-            host_s=kinds.get("host", 0.0) + host_floor,
-            collective_s=kinds.get("collective", 0.0))
+        # one fused pass: the per-kind fold (== report.aggregate(events,
+        # "kind"): same left-to-right addition order) and the makespan
+        # max share the event iteration; the makespan is cached on the
+        # timeline so post-run metrics don't re-fold
+        kinds = {}
+        kget = kinds.get
+        mk = None
+        for e in tl.events:
+            k = e.kind
+            kinds[k] = kget(k, 0.0) + e.duration
+            end = e.start + e.duration
+            if mk is None or end > mk:
+                mk = end
+        if makespan is None:
+            makespan = mk if mk is not None else 0.0
+            tl._mk_cache = makespan
+    elif makespan is None:
+        makespan = tl.makespan
+    bd = report.Breakdown(
+        accelerator_s=kinds.get("compute", 0.0),
+        transfer_s=kinds.get("transfer", 0.0),
+        host_s=kinds.get("host", 0.0) + host_floor,
+        collective_s=kinds.get("collective", 0.0))
     # the aggregate-report device: Fig-1 dot-hiding budget and the closed
     # form roofline are charged at the first accelerator's parameters
     # (== the flat config on a homogeneous topology)

@@ -46,7 +46,8 @@ continuous DSE parameter vector.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
+import dataclasses
+from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
 BYTES_PER_ELEM = 4  # graph tensors are fp32
@@ -88,6 +89,82 @@ class CostedOp:
         return self.bytes_in + self.bytes_out
 
 
+_OP_FIELDS = frozenset(f.name for f in dataclasses.fields(CostedOp))
+
+
+def replace(op, **changes):
+    """``dataclasses.replace`` with a fast path for :class:`CostedOp`.
+
+    The training/cluster lowerings clone hundreds of thousands of ops per
+    sweep (segment templates stamped out per stage and microbatch);
+    ``dataclasses.replace`` re-runs the frozen ``__init__`` — one guarded
+    ``object.__setattr__`` per field — which dominates program
+    construction.  ``CostedOp`` has no ``__post_init__`` and no derived
+    state, so a shallow ``__dict__`` copy produces the identical frozen
+    instance.  Unknown field names still raise ``TypeError`` like
+    ``dataclasses.replace``; any other dataclass takes the stock path."""
+    if type(op) is CostedOp:
+        if not changes.keys() <= _OP_FIELDS:
+            bad = sorted(changes.keys() - _OP_FIELDS)
+            raise TypeError(f"replace() got unexpected CostedOp "
+                            f"field(s) {bad}")
+        new = object.__new__(CostedOp)
+        new.__dict__.update(op.__dict__)
+        new.__dict__.update(changes)
+        return new
+    return dataclasses.replace(op, **changes)
+
+
+def linear_runs(ops: Sequence[CostedOp]) -> List[List[str]]:
+    """Maximal linear runs of fabric hop ops: each interior link is a
+    single-consumer -> single-dep edge between two ``tier`` ops that are
+    LPT-neutral (``flops == 0`` and no pinned ``duration_s`` — the
+    scheduling priority of such a hop is exactly 0.0 under every config,
+    so contracting the link can never reorder the ready heap).
+
+    These are the segments the engine's compiled plan contracts (the
+    chain fast path generalized from whole-program to per-segment): along
+    a run, finishing op ``i`` readies exactly its successor, so the event
+    loop's behavior over the run is statically replayable.  Returns runs
+    of length >= 2, in program order; single hop ops are not runs."""
+    index = {op.name: i for i, op in enumerate(ops)}
+    n_consumers = [0] * len(ops)
+    sole_consumer = [-1] * len(ops)
+    for i, op in enumerate(ops):
+        for d in op.deps:
+            j = index.get(d)
+            if j is not None:
+                n_consumers[j] += 1
+                sole_consumer[j] = i
+
+    def neutral(op: CostedOp) -> bool:
+        return (op.tier is not None and op.flops == 0.0
+                and op.duration_s is None)
+
+    nxt = [-1] * len(ops)
+    has_prev = [False] * len(ops)
+    for i, op in enumerate(ops):
+        if not neutral(op) or n_consumers[i] != 1:
+            continue
+        j = sole_consumer[i]
+        succ = ops[j]
+        if not neutral(succ) or len(succ.deps) != 1:
+            continue
+        nxt[i] = j
+        has_prev[j] = True
+    runs: List[List[str]] = []
+    for i, op in enumerate(ops):
+        if op.tier is None or has_prev[i] or nxt[i] < 0:
+            continue
+        run = [op.name]
+        j = nxt[i]
+        while j >= 0:
+            run.append(ops[j].name)
+            j = nxt[j]
+        runs.append(run)
+    return runs
+
+
 @dataclass
 class Program:
     ops: List[CostedOp]
@@ -103,9 +180,20 @@ class Program:
         return sum(getattr(op, attr) for op in self.ops)
 
     def totals(self) -> Dict[str, float]:
-        return {k: self.total(k) for k in
-                ("flops", "dot_flops", "bytes_in", "bytes_out",
-                 "collective_bytes", "wire_bytes", "transcendentals")}
+        # one pass over the ops; each accumulator adds left-to-right in op
+        # order, so every sum is the same IEEE fold ``total()`` performs
+        fl = dot = bi = bo = cb = wb = tc = 0.0
+        for op in self.ops:
+            fl += op.flops
+            dot += op.dot_flops
+            bi += op.bytes_in
+            bo += op.bytes_out
+            cb += op.collective_bytes
+            wb += op.wire_bytes
+            tc += op.transcendentals
+        return {"flops": fl, "dot_flops": dot, "bytes_in": bi,
+                "bytes_out": bo, "collective_bytes": cb, "wire_bytes": wb,
+                "transcendentals": tc}
 
     def as_hlo_dict(self) -> Dict[str, float]:
         """Aggregate cost dict in the ``analyze_hlo`` schema — feeding this

@@ -71,12 +71,18 @@ def aggregate(events: Iterable, key: str = "kind") -> Dict[str, float]:
     """Sum event durations grouped by an event attribute (kind/worker/phase
     — phase uses the event's phase tag, else the op-name prefix)."""
     out: Dict[str, float] = {}
+    get = out.get
+    if key == "kind":              # the hot aggregation: direct attribute
+        for e in events:
+            k = e.kind
+            out[k] = get(k, 0.0) + e.duration
+        return out
     for e in events:
         if key == "phase":
             k = getattr(e, "phase", "") or e.name.split("/")[0]
         else:
             k = getattr(e, key)
-        out[k] = out.get(k, 0.0) + e.duration
+        out[k] = get(k, 0.0) + e.duration
     return out
 
 

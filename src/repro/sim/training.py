@@ -267,7 +267,10 @@ def simulate_training(cfg, *, n_stages: int = 1, n_microbatches: int = 1,
     # all-reduce after fwd/bwd and the per-stage DP gradient reduce
     def _segment(t: Program, prefix: str):
         sel = [op for op in t.ops if op.name.startswith(prefix)]
-        return sel, (ir._sinks(sel) if sel else ())
+        names = {o.name for o in sel}
+        # internal deps precomputed once: per clone only the rename varies
+        pre = [(o, tuple(d for d in o.deps if d in names)) for o in sel]
+        return pre, (ir._sinks(sel) if sel else ())
 
     tpf_seg = [_segment(t, "train/tpf") for t in templates]
     tpb_seg = [_segment(t, "train/tpb") for t in templates]
@@ -292,6 +295,9 @@ def simulate_training(cfg, *, n_stages: int = 1, n_microbatches: int = 1,
     def cls(s: int) -> str:
         return f"stage{s}" if pinned else "accel"
 
+    _bh_tmpl: Dict[Tuple[int, int], CostedOp] = {}
+    _new = object.__new__
+
     def boundary_hop(nm: str, lo: int, recv: int,
                      deps: Tuple[str, ...]) -> CostedOp:
         """The stage-(lo)<->(lo+1) boundary tensor, placed on receiving
@@ -299,29 +305,63 @@ def simulate_training(cfg, *, n_stages: int = 1, n_microbatches: int = 1,
         legacy device-transfer modeling — which is what makes a
         single-tier fabric bit-identical to the pre-fabric simulator;
         stages on different chips/nodes ride the fabric tier their member
-        sets span."""
-        members = tp_members(lo) + tp_members(lo + 1)
-        ti = fabric.span_tier(members)
-        if ti == 0:
-            return CostedOp(name=nm, bytes_in=boundary_bytes, deps=deps,
-                            phase=f"s{recv}", device_class=cls(recv))
-        return CostedOp(name=nm, collective_bytes=boundary_bytes,
-                        wire_bytes=boundary_bytes,
-                        tier=fabric.tiers[ti].name,
-                        lane=fabric.lane(members, ti),
-                        deps=deps, phase=f"s{recv}",
-                        device_class=cls(recv))
+        sets span.  The op is identical across microbatches except for
+        name/deps, so the tier resolution is cached per stage pair."""
+        tmpl = _bh_tmpl.get((lo, recv))
+        if tmpl is None:
+            members = tp_members(lo) + tp_members(lo + 1)
+            ti = fabric.span_tier(members)
+            if ti == 0:
+                tmpl = CostedOp(name="", bytes_in=boundary_bytes,
+                                phase=f"s{recv}", device_class=cls(recv))
+            else:
+                tmpl = CostedOp(name="",
+                                collective_bytes=boundary_bytes,
+                                wire_bytes=boundary_bytes,
+                                tier=fabric.tiers[ti].name,
+                                lane=fabric.lane(members, ti),
+                                phase=f"s{recv}",
+                                device_class=cls(recv))
+            _bh_tmpl[(lo, recv)] = tmpl
+        c = _new(CostedOp)
+        d = c.__dict__
+        d.update(tmpl.__dict__)
+        d["name"] = nm
+        d["deps"] = deps
+        return c
 
     ops: List[CostedOp] = []
+    ops_append = ops.append
     for s in range(n_stages):
         prev: Tuple[str, ...] = ()      # serialization edge on this device
+        ph = f"s{s}"
+        dc = cls(s)
 
         def emit(op: CostedOp) -> None:
             nonlocal prev
             deps = tuple(op.deps)
             add = tuple(p for p in prev if p not in deps)
-            ops.append(ir.replace(op, deps=add + deps))
+            c = _new(CostedOp)
+            d = c.__dict__
+            d.update(op.__dict__)
+            d["deps"] = add + deps
+            ops_append(c)
             prev = (op.name,)
+
+        def emit_t(op: CostedOp, nm: str, deps: Tuple[str, ...]) -> None:
+            """emit() of a per-stage template op restamped with
+            name/deps/phase/device_class — the hot clone path."""
+            nonlocal prev
+            add = tuple(p for p in prev if p not in deps)
+            c = _new(CostedOp)
+            d = c.__dict__
+            d.update(op.__dict__)
+            d["name"] = nm
+            d["deps"] = add + deps
+            d["phase"] = ph
+            d["device_class"] = dc
+            ops_append(c)
+            prev = (nm,)
 
         def emit_hops(seg, tag: str, roots: Tuple[str, ...]) -> None:
             """Clone a hop segment under ``tag``: internal deps rename
@@ -331,14 +371,16 @@ def simulate_training(cfg, *, n_stages: int = 1, n_microbatches: int = 1,
             (via ``roots``/``prev``), matching a blocking collective."""
             nonlocal prev
             seg_ops, seg_sinks = seg
-            names = {o.name for o in seg_ops}
-            for o in seg_ops:
-                internal = tuple(f"{d}@{tag}" for d in o.deps
-                                 if d in names)
-                ops.append(ir.replace(o, name=f"{o.name}@{tag}",
-                                      deps=internal or roots,
-                                      phase=f"s{s}"))
-            prev = tuple(f"{n}@{tag}" for n in seg_sinks)
+            at = "@" + tag
+            for o, idep in seg_ops:
+                c = _new(CostedOp)
+                d = c.__dict__
+                d.update(o.__dict__)
+                d["name"] = o.name + at
+                d["deps"] = (tuple(dp + at for dp in idep) or roots)
+                d["phase"] = ph
+                ops_append(c)
+            prev = tuple(n + at for n in seg_sinks)
 
         for kind, m in schedule_order(schedule, s, n_stages,
                                       n_microbatches):
@@ -352,9 +394,7 @@ def simulate_training(cfg, *, n_stages: int = 1, n_microbatches: int = 1,
                     else:
                         emit(boundary_hop(f"xF/s{s}/m{m}", s - 1, s,
                                           f_out(s - 1, m)))
-                emit(ir.replace(by_name[s]["train/fwd"],
-                                name=f"F/s{s}/m{m}", deps=(),
-                                phase=f"s{s}", device_class=cls(s)))
+                emit_t(by_name[s]["train/fwd"], f"F/s{s}/m{m}", ())
                 if tpf_seg[s][0]:
                     emit_hops(tpf_seg[s], f"s{s}m{m}", prev)
             else:
@@ -367,24 +407,18 @@ def simulate_training(cfg, *, n_stages: int = 1, n_microbatches: int = 1,
                     else:
                         emit(boundary_hop(f"xB/s{s}/m{m}", s, s,
                                           b_out(s + 1, m)))
-                emit(ir.replace(by_name[s]["train/bwd"],
-                                name=f"B/s{s}/m{m}",
-                                deps=(f"F/s{s}/m{m}",),
-                                phase=f"s{s}", device_class=cls(s)))
+                emit_t(by_name[s]["train/bwd"], f"B/s{s}/m{m}",
+                       (f"F/s{s}/m{m}",))
                 if tpb_seg[s][0]:
                     emit_hops(tpb_seg[s], f"s{s}m{m}", prev)
         if "train/reduce" in by_name[s]:
-            emit(ir.replace(by_name[s]["train/reduce"],
-                            name=f"R/s{s}", deps=(),
-                            phase=f"s{s}", device_class=cls(s)))
+            emit_t(by_name[s]["train/reduce"], f"R/s{s}", ())
         elif dp_seg[s][0]:
             # the stage's gradient all-reduce waits only for ITS last
             # backward — late stages reduce while earlier stages are
             # still in backward (DP/bwd overlap across the pipeline)
             emit_hops(dp_seg[s], f"s{s}", prev)
-        emit(ir.replace(by_name[s]["train/update"],
-                        name=f"U/s{s}", deps=(),
-                        phase=f"s{s}", device_class=cls(s)))
+        emit_t(by_name[s]["train/update"], f"U/s{s}", ())
 
     tokens = float(global_batch) * float(seq_len)
     program = Program(
@@ -404,29 +438,35 @@ def simulate_training(cfg, *, n_stages: int = 1, n_microbatches: int = 1,
     # (p-1)/(m+p-1) bound describes
     t0 = t1 = None
     busy = 0.0
+    busy_all: Dict[str, float] = {}   # per-worker busy (non-idle) seconds
     for e in res.timeline.events:
-        if e.kind != "compute":
+        k = e.kind
+        if k != "idle":
+            w = e.worker
+            busy_all[w] = busy_all.get(w, 0.0) + e.duration
+        if k != "compute":
             continue
-        if e.name.startswith("F/"):
+        nm = e.name
+        if nm.startswith("F/"):
             t0 = e.start if t0 is None or e.start < t0 else t0
             busy += e.duration
-        elif e.name.startswith("B/"):
+        elif nm.startswith("B/"):
             end = e.start + e.duration
             t1 = end if t1 is None or end > t1 else t1
             busy += e.duration
     span = (t1 - t0) if (t0 is not None and t1 is not None) else 0.0
     bubble = (1.0 - busy / (n_stages * span)) if span > 0.0 else 0.0
 
-    util = res.device_utilization()
+    # device_utilization() and the per-device busy map share the single
+    # event pass above (same accumulation order -> bit-identical floats)
+    mk = res.timeline.makespan
+    util = {d.name: (busy_all.get(d.name, 0.0) / mk if mk else 0.0)
+            for d in run_config.resolved_topology().devices}
     if pinned:
         stage_util = {d: util.get(d, 0.0) for d in stage_devs}
     else:
         stage_util = util
-    busy_by_dev: Dict[str, float] = {}
-    for e in res.timeline.events:
-        if e.kind != "idle" and e.worker in util:
-            busy_by_dev[e.worker] = busy_by_dev.get(e.worker, 0.0) \
-                + e.duration
+    busy_by_dev = {w: v for w, v in busy_all.items() if w in util}
 
     return TrainingResult(
         program=program, engine=res, schedule=schedule, n_stages=n_stages,

@@ -280,7 +280,14 @@ def test_bench_cluster_schema():
     assert sid["no_dp_bit_identical"] is True
     assert sid["dp_ring_matches"] is True
 
-    grid = b["cluster_grid"]
+    # the grid is committed columnar (compact artifact format): a column
+    # list plus one row array per cell, floats rounded to 6 significant
+    # digits — decode it back to records before the content checks
+    g = b["cluster_grid"]
+    assert set(g) == {"columns", "rows"}
+    assert g["rows"] and all(len(r) == len(g["columns"])
+                             for r in g["rows"])
+    grid = [dict(zip(g["columns"], r)) for r in g["rows"]]
     need = {"model", "n_accel", "dp_degree", "pp_degree", "tp_degree",
             "collective_algo", "step_time_s", "cluster_tokens_per_s",
             "cluster_j", "tco_usd_per_step", "tco_usd_per_mtok",
@@ -309,7 +316,9 @@ def test_bench_cluster_schema():
     assert cells
     for key, cell in cells.items():
         if "ring" in cell and "hierarchical" in cell:
-            assert cell["hierarchical"] <= cell["ring"] * (1 + 1e-9), key
+            # 2e-6 headroom: the committed grid rounds to 6 significant
+            # digits, so equal-to-rounding cells may differ by ~5e-7 rel
+            assert cell["hierarchical"] <= cell["ring"] * (1 + 2e-6), key
     # the headline question has an answer for both models
     tgt = b["cheapest_under_target"]
     assert _finite_pos(tgt["target_step_s"])

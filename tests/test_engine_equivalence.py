@@ -209,6 +209,114 @@ def test_property_homogeneous_topology_matches_flat(data):
     assert_bit_identical(engine.run(prog, tcfg), engine.run(prog, cfg))
 
 
+# ---------------------------------------------------------------------------
+# linear-run fusion + typed-array event core: the fused DAG loop is
+# bit-identical to the dict-based loop (and hence to the frozen reference)
+
+
+def _fabric_dag(rng: random.Random) -> ir.Program:
+    """Parallel collective lanes over a two-tier fabric: a genuine DAG
+    whose ring hops are LPT-neutral linear runs — the fusion target."""
+    fab = hw.Fabric.cluster(8)
+    kind = rng.choice(["all_reduce", "reduce_scatter", "all_gather"])
+    a = ir.from_collective(kind, rng.choice([1e6, 32e6]), (0, 1, 2, 3),
+                           fab, prefix="a")
+    b = ir.from_collective("all_reduce", rng.choice([4e6, 16e6]),
+                           (4, 5, 6, 7), fab, prefix="b")
+    return ir.Program(list(a.ops) + list(b.ops), name="lanes")
+
+
+FABRIC_CONFIGS = [
+    engine.EngineConfig(n_workers=4),
+    engine.EngineConfig(n_workers=4, ici_bw=10e9, ici_lat_s=2e-6),
+    engine.EngineConfig(n_workers=8, node_bw=5e9, node_lat_s=1e-6,
+                        interface="hbm", hbm_ports=2),
+]
+
+
+def test_linear_runs_match_compiled_plan():
+    """ir.linear_runs (the IR-level view of LPT-neutral hop runs) agrees
+    with what the compiled plan actually contracts."""
+    rng = random.Random(11)
+    for _ in range(5):
+        prog = _fabric_dag(rng)
+        runs = ir.linear_runs(prog.ops)
+        cp = engine.prepare(prog).compiled()
+        assert runs and all(len(r) >= 2 for r in runs)
+        assert sum(len(r) - 1 for r in runs) == cp.n_run_interior
+    # a non-LPT-neutral hop (nonzero flops or pinned duration) can never
+    # be part of a run: its priority is config-dependent
+    prog = _fabric_dag(random.Random(3))
+    ops = list(prog.ops)
+    mid = next(i for i, op in enumerate(ops)
+               if op.tier is not None and 0 < i < len(ops) - 1)
+    heavy = ir.replace(ops[mid], flops=1e9)
+    runs = ir.linear_runs(ops[:mid] + [heavy] + ops[mid + 1:])
+    assert all(heavy.name not in r for r in runs)
+    cp2 = engine.prepare(
+        ir.Program(ops[:mid] + [heavy] + ops[mid + 1:])).compiled()
+    assert sum(len(r) - 1 for r in runs) == cp2.n_run_interior
+
+
+def test_fused_loop_equals_dict_loop_on_random_dags():
+    rng = random.Random(2025)
+    for _ in range(15):
+        prog = random_program(rng, rng.randint(2, 60), chain=False)
+        plan = engine.prepare(prog)
+        for cfg in CONFIGS:
+            assert_bit_identical(
+                engine.run(prog, cfg, plan=plan, fuse=True),
+                engine.run(prog, cfg, plan=plan, fuse=False))
+
+
+def test_fused_loop_equals_dict_loop_on_fabric_dags():
+    rng = random.Random(77)
+    for _ in range(6):
+        prog = _fabric_dag(rng)
+        plan = engine.prepare(prog)
+        assert engine.fusion_resolvable(plan)
+        for cfg in FABRIC_CONFIGS:
+            assert_bit_identical(
+                engine.run(prog, cfg, plan=plan, fuse=True),
+                engine.run(prog, cfg, plan=plan, fuse=False))
+
+
+def test_fused_core_matches_frozen_reference():
+    """The typed-array core (fuse=True, the default) reproduces the
+    frozen PR-base loop bit for bit on flat configs."""
+    rng = random.Random(31)
+    for _ in range(10):
+        prog = random_program(rng, rng.randint(1, 50), chain=False)
+        for cfg in CONFIGS:
+            assert_bit_identical(engine.run(prog, cfg, fuse=True),
+                                 run_reference(prog, cfg))
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.data())
+def test_property_fused_matches_unfused(data):
+    """Random DAGs x interfaces x (flat | homogeneous-topology) configs,
+    plus fabric-lane DAGs: fuse=True == fuse=False, events and all."""
+    seed = data.draw(st.integers(min_value=0, max_value=2**20))
+    rng = random.Random(seed)
+    if data.draw(st.booleans()):
+        prog = _fabric_dag(rng)
+        cfg = FABRIC_CONFIGS[data.draw(st.integers(
+            min_value=0, max_value=len(FABRIC_CONFIGS) - 1))]
+    else:
+        n = data.draw(st.integers(min_value=2, max_value=40))
+        prog = random_program(rng, n, chain=False)
+        cfg = CONFIGS[data.draw(st.integers(min_value=0,
+                                            max_value=len(CONFIGS) - 1))]
+        if data.draw(st.booleans()):
+            cfg = dataclasses.replace(
+                cfg, topology=_homogeneous_topology(
+                    cfg, data.draw(st.booleans())))
+    plan = engine.prepare(prog)
+    assert_bit_identical(engine.run(prog, cfg, plan=plan, fuse=True),
+                         engine.run(prog, cfg, plan=plan, fuse=False))
+
+
 def test_cycle_still_detected():
     ops = [ir.CostedOp("a", deps=("b",)), ir.CostedOp("b", deps=("a",))]
     with pytest.raises(ValueError):

@@ -6,8 +6,8 @@ import pytest
 from repro.apps.paper_graphs import build_paper_graph
 from repro.configs.paper_nets import PAPER_NETS
 from repro.sim import engine, ir
-from repro.sim.sweep import (as_records, clear_caches, lower_graph,
-                             lower_hlo, sweep)
+from repro.sim.sweep import (as_records, batched, clear_caches,
+                             graph_digest, lower_graph, lower_hlo, sweep)
 
 HLO = {"flops": 1e15, "dot_flops": 9e14, "bytes": 1e12,
        "collective_bytes": 1e10, "wire_bytes": 1.5e10,
@@ -55,7 +55,7 @@ def test_sweep_empty_and_bad_executor():
         sweep(prog, CONFIGS, executor="carrier-pigeon")
 
 
-def test_lower_graph_memoizes_on_identity_and_params():
+def test_lower_graph_memoizes_on_digest_and_params():
     clear_caches()
     g = build_paper_graph(PAPER_NETS["lenet5"], batch=1)
     p1 = lower_graph(g, batch=1, max_tile_elems=2048)
@@ -65,8 +65,28 @@ def test_lower_graph_memoizes_on_identity_and_params():
     assert p3 is not p1                   # tile params are part of the key
     p4 = lower_graph(g, batch=4, max_tile_elems=2048)
     assert p4 is not p1                   # batch is part of the key
+    # the key is the structural digest, not object identity: a freshly
+    # built but identical graph hits the same cache entry
     g2 = build_paper_graph(PAPER_NETS["lenet5"], batch=1)
-    assert lower_graph(g2, 1, 2048) is not p1   # different graph object
+    assert graph_digest(g2) == graph_digest(g)
+    assert lower_graph(g2, 1, 2048) is p1
+    # and a structurally different graph misses
+    g3 = build_paper_graph(
+        PAPER_NETS[next(k for k in PAPER_NETS if k != "lenet5")], batch=1)
+    assert graph_digest(g3) != graph_digest(g)
+    assert lower_graph(g3, 1, 2048) is not p1
+
+
+def test_graph_digest_is_stable_per_object_across_lowering():
+    """``from_graph`` backfills weight-derived attrs in place; the digest
+    is pinned at first sight of the object, so re-lowering the same graph
+    keeps hitting its own entry instead of forking a post-mutation key."""
+    clear_caches()
+    g = build_paper_graph(PAPER_NETS["lenet5"], batch=1)
+    d0 = graph_digest(g)
+    p1 = lower_graph(g, batch=1, max_tile_elems=2048)
+    assert graph_digest(g) == d0
+    assert lower_graph(g, batch=1, max_tile_elems=2048) is p1
 
 
 def test_lower_hlo_memoizes_on_content():
@@ -150,6 +170,38 @@ def test_utilization_counts_provisioned_workers():
     # saturated single worker stays 1.0
     res1 = engine.run(prog, engine.EngineConfig(n_workers=1))
     assert res1.utilization() == pytest.approx(1.0)
+
+
+def test_batched_exact_on_fusion_resolvable_dag():
+    """Parallel collective lanes are a DAG, but linear-run fusion resolves
+    them to a small segment graph — batched() must price the whole grid
+    exactly (lower == upper == engine.run) with relaxation_err == 0."""
+    from repro.sim import hw
+    fab = hw.Fabric.cluster(16)
+    prog = ir.Program(
+        list(ir.from_collective("all_reduce", 32e6, (0, 1, 2, 3), fab,
+                                prefix="a").ops)
+        + list(ir.from_collective("all_reduce", 32e6, (4, 5, 6, 7), fab,
+                                  prefix="b").ops),
+        name="parallel-lanes")
+    plan = engine.prepare(prog)
+    assert not plan.is_chain and engine.fusion_resolvable(plan)
+    cfgs = [engine.EngineConfig(ici_bw=b, ici_lat_s=l, n_workers=4)
+            for b in (25e9, 100e9, 400e9) for l in (0.0, 1e-6)]
+    bs = batched(prog, cfgs, top_k=3)
+    assert bs.exact and not bs.is_chain and bs.backend == "engine"
+    import numpy as np
+    assert np.array_equal(bs.lower, bs.upper)
+    for m, c in zip(bs.makespans, cfgs):
+        assert float(m) == engine.run(prog, c).makespan     # bit-identical
+    assert len(bs.verified) == 3
+    for v in bs.verified:
+        assert v["relaxation_err"] == 0.0
+        assert v["analytic_s"] == v["exact_s"]
+    assert bs.best()["exact_s"] == min(float(m) for m in bs.makespans)
+    # chain grids keep the exact flag through the analytic path
+    chain = ir.from_hlo(HLO, n_ops=8)
+    assert batched(chain, [engine.EngineConfig()], top_k=1).exact
 
 
 def test_from_decode_shape_and_seriality():
