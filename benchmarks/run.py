@@ -34,6 +34,8 @@ MODULES = [
     ("fleet", "fleet — memoized multi-replica serving replay at scale"),
     ("cluster", "cluster — DP x TP x PP over the hierarchical network "
                 "fabric with first-class collectives"),
+    ("calibration", "calibration — measured Pallas kernels vs the fitted "
+                    "cost backends"),
 ]
 
 

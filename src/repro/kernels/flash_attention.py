@@ -71,25 +71,39 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
                                              "interpret"))
 def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
                     bq: int = 256, bk: int = 256, interpret: bool = False):
-    """q, k, v: (B, H, S, D) (KV already expanded to H heads; GQA expansion
-    is a free broadcast at the call site).  Returns (B, H, S, D)."""
+    """q: (B, H, S, D); k, v: (B, Hkv, S, D) with ``H % Hkv == 0``.
+
+    GQA/MQA (``Hkv < H``) is handled *inside* the kernel: the KV block
+    index maps resolve each query head's group head, so KV stays at its
+    native ``(B, Hkv, S, D)`` — no broadcast materialization, and the
+    kernel's operand traffic matches the model's GQA byte accounting.
+    Returns (B, H, S, D)."""
     B, H, S, D = q.shape
+    Hkv = k.shape[1]
+    assert H % Hkv == 0, (H, Hkv)
+    G = H // Hkv
     bq = min(bq, S)
     bk = min(bk, S)
     assert S % bq == 0 and S % bk == 0, (S, bq, bk)
     n_k = S // bk
     grid = (B * H, S // bq, n_k)
     qf = q.reshape(B * H, S, D)
-    kf = k.reshape(B * H, S, D)
-    vf = v.reshape(B * H, S, D)
+    kf = k.reshape(B * Hkv, S, D)
+    vf = v.reshape(B * Hkv, S, D)
+
+    def kv_index(h, i, j):
+        # flat q-head h = b*H + hq maps to KV row b*Hkv + hq//G
+        # (identity when G == 1: (h//H)*H + h%H == h)
+        return ((h // H) * Hkv + (h % H) // G, j, 0)
+
     out = pl.pallas_call(
         functools.partial(_flash_kernel, bq=bq, bk=bk, n_k=n_k,
                           causal=causal, window=window, scale=D ** -0.5),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, bq, D), lambda h, i, j: (h, i, 0)),
-            pl.BlockSpec((1, bk, D), lambda h, i, j: (h, j, 0)),
-            pl.BlockSpec((1, bk, D), lambda h, i, j: (h, j, 0)),
+            pl.BlockSpec((1, bk, D), kv_index),
+            pl.BlockSpec((1, bk, D), kv_index),
         ],
         out_specs=pl.BlockSpec((1, bq, D), lambda h, i, j: (h, i, 0)),
         out_shape=jax.ShapeDtypeStruct((B * H, S, D), q.dtype),

@@ -1,39 +1,38 @@
 """Jitted public wrappers for the Pallas kernels.
 
-On this CPU container the kernels run with interpret=True (the kernel body
-executes in Python for correctness validation); on a real TPU the same calls
-compile to Mosaic.  ``INTERPRET`` flips automatically.
+On a CPU container the kernels run with interpret=True (the kernel body
+executes in Python for correctness validation); on a real TPU the same
+calls compile to Mosaic.  The interpret default is resolved **per call**
+(not at import time): selecting a backend after this module imports, or
+running under a ``jax.default_device`` override, must flip the path.
 """
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.mamba_scan import mamba_scan as _mamba
 from repro.kernels.nvdla_matmul import matmul as _matmul
 
-INTERPRET = jax.default_backend() != "tpu"
+
+def _interpret() -> bool:
+    """Whether pallas_call should interpret: anything but a real TPU."""
+    return jax.default_backend() != "tpu"
 
 
 def matmul(a, b, **kw):
-    kw.setdefault("interpret", INTERPRET)
+    kw.setdefault("interpret", _interpret())
     return _matmul(a, b, **kw)
 
 
 def flash_attention(q, k, v, *, causal=True, window=0, **kw):
-    kw.setdefault("interpret", INTERPRET)
-    B, H, S, D = q.shape
-    Hkv = k.shape[1]
-    if Hkv != H:  # GQA: broadcast KV to full heads (free at the kernel edge)
-        G = H // Hkv
-        k = jnp.broadcast_to(k[:, :, None], (B, Hkv, G, S, D)) \
-            .reshape(B, H, S, D)
-        v = jnp.broadcast_to(v[:, :, None], (B, Hkv, G, S, D)) \
-            .reshape(B, H, S, D)
+    # GQA/MQA KV stays at its native (B, Hkv, S, D): the kernel's KV
+    # block index maps resolve the group head, so no broadcast is
+    # materialized here and measured bytes match the model's accounting
+    kw.setdefault("interpret", _interpret())
     return _flash(q, k, v, causal=causal, window=window, **kw)
 
 
 def mamba_scan(x, dt, B, C, A, D, **kw):
-    kw.setdefault("interpret", INTERPRET)
+    kw.setdefault("interpret", _interpret())
     return _mamba(x, dt, B, C, A, D, **kw)

@@ -79,6 +79,8 @@ over a fabric, and ``sweep.cluster_sweep`` / ``as_cluster_records``
 price whole placement grids with per-step energy and TCO
 (``hw.tco_per_step``).
 """
+from repro.sim.backends import (CostBackend, RooflineBackend,  # noqa: F401
+                                SystolicBackend, TableBackend, get_backend)
 from repro.sim.costmodel import (CostModel, Unsupported,  # noqa: F401
                                  relaxation_err)
 from repro.sim.engine import (EngineConfig, EngineResult, Plan,  # noqa: F401

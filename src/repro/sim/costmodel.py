@@ -45,6 +45,7 @@ critical-path recurrence would unroll into the jaxpr).
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from collections import OrderedDict
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -52,6 +53,7 @@ import numpy as np
 
 from repro.core.energy import EnergyModel
 from repro.core.interfaces import DMA_LAUNCH_S, FLUSH_PER_BYTE
+from repro.sim import backends as _backends
 from repro.sim import hw
 from repro.sim.hw import PARAM_FIELDS
 
@@ -221,16 +223,25 @@ class ChainTerms:
     has_c: object
 
 
-def chain_terms(a: OpArrays, p: ChainParams, xp=np) -> ChainTerms:
+def chain_terms(a: OpArrays, p: ChainParams, xp=np,
+                comp=None) -> ChainTerms:
     """The hoisted per-op terms of ``engine._run_chain`` as a pure
     function of (op arrays, parameter point) — formulas, operation order
     and IEEE semantics identical to the scalar interface models in
     ``core.interfaces`` / ``core.energy``.  With ``xp=np`` and scalar
     parameters this IS the engine's chain fast path math; with (B, 1)
     columns it prices B design points at once; with ``xp=jax.numpy`` it
-    is traceable and differentiable."""
+    is traceable and differentiable.
+
+    ``comp`` overrides the roofline compute column with externally priced
+    per-op seconds (``engine._run_chain`` passes the cost backend's
+    ``op_time`` values, keeping the chain fast path bit-identical to the
+    event loop under non-roofline backends)."""
     with np.errstate(divide="ignore", invalid="ignore"):
-        comp = xp.where(a.has_dur, a.dur, a.flops / p.peak_flops)
+        if comp is None:
+            comp = xp.where(a.has_dur, a.dur, a.flops / p.peak_flops)
+        else:
+            comp = xp.asarray(comp)
 
         nb = a.nb
         iface = p.interface
@@ -325,6 +336,10 @@ def chain_params_for(config, device_class: str = "accel") -> ChainParams:
     if eff.interface not in CHAIN_INTERFACES:
         raise Unsupported(f"interface {eff.interface!r} has no analytic "
                           "chain model")
+    if not _backends.is_roofline(eff.cost_backend):
+        raise Unsupported(
+            "non-roofline cost backend: per-op compute has no analytic "
+            "chain model; price through the exact engine")
     return ChainParams.from_engine(config, eff, ports)
 
 
@@ -396,12 +411,37 @@ def _program_info(program):
 # the model
 
 
+_JAX_PROBE_WARNED = False
+
+
 def _has_jax() -> bool:
+    """True when jax imports cleanly.
+
+    ``ModuleNotFoundError`` naming jax itself is the expected no-toolchain
+    case and stays silent.  Anything else — a jaxlib/CUDA mismatch raising
+    ``ImportError``/``RuntimeError``/``OSError``, or a missing transitive
+    dependency — is a *broken* install, not an absent one: the model still
+    degrades to numpy, but with a one-time ``RuntimeWarning`` naming the
+    cause instead of swallowing it.  Exceptions outside those types
+    propagate."""
+    global _JAX_PROBE_WARNED
     try:
         import jax  # noqa: F401
         return True
-    except Exception:
-        return False
+    except ModuleNotFoundError as e:
+        if e.name in ("jax", "jaxlib"):
+            return False
+        cause = e
+    except (ImportError, RuntimeError, OSError) as e:
+        cause = e
+    if not _JAX_PROBE_WARNED:
+        _JAX_PROBE_WARNED = True
+        warnings.warn(
+            f"jax import failed with {type(cause).__name__}: {cause} — "
+            "the jax install looks broken (not merely absent); falling "
+            "back to the numpy cost-model backend", RuntimeWarning,
+            stacklevel=2)
+    return False
 
 
 class CostModel:
@@ -440,6 +480,12 @@ class CostModel:
         if eff.interface not in CHAIN_INTERFACES:
             raise Unsupported(
                 f"no analytic model for interface {eff.interface!r}")
+        if not (_backends.is_roofline(base.cost_backend)
+                and _backends.is_roofline(eff.cost_backend)):
+            raise Unsupported(
+                "non-roofline cost backend: per-op compute is priced by "
+                "backend.op_time, outside the analytic chain terms; use "
+                "the exact engine (sweep())")
         self._eff = eff
         self._ports = res.ports_l[0]
         self.n_workers = len(topo.devices)

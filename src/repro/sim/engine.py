@@ -61,7 +61,7 @@ from typing import Callable, Dict, List, NamedTuple, Optional, Tuple
 
 from repro.core.energy import DEFAULT_ENERGY, EnergyModel
 from repro.core.timeline import Event, Timeline
-from repro.sim import hw, report
+from repro.sim import backends, hw, report
 from repro.sim.hw import Device, Link, SoCTopology
 from repro.sim.ir import CostedOp, Program
 
@@ -148,6 +148,13 @@ class EngineConfig:
     inter_bw: float = hw.INTER_BW
     inter_lat_s: float = hw.INTER_LAT_S
     fabric: Optional[hw.Fabric] = None
+    # per-op compute-cost backend (repro.sim.backends): None = the native
+    # roofline math (every hot path keeps its original inline expression,
+    # so the default is bit-identical to the pre-backend engine); a
+    # CostBackend instance or registered name ("systolic") prices compute
+    # through ``backend.op_time(op, effective_config)``.  Backends are
+    # frozen dataclasses, so configs stay hashable/cacheable.
+    cost_backend: Optional[object] = None
 
     @property
     def overlap(self) -> bool:
@@ -161,6 +168,11 @@ class EngineConfig:
         if self.topology is not None:
             return self.topology
         return SoCTopology.homogeneous(self.n_workers)
+
+    def resolved_backend(self) -> "backends.CostBackend":
+        """The compute-cost backend instance this config prices with
+        (``None`` resolves to the shared roofline backend)."""
+        return backends.get_backend(self.cost_backend)
 
 
 # ---------------------------------------------------------------------------
@@ -182,12 +194,15 @@ def _device_config(config: EngineConfig, topo: SoCTopology,
     bw = dev.hbm_bw if dev.hbm_bw is not None else (
         link.bandwidth if link.bandwidth is not None else config.hbm_bw)
     vmem = dev.vmem_bw if dev.vmem_bw is not None else config.vmem_bw
+    cb = dev.cost_backend if dev.cost_backend is not None \
+        else config.cost_backend
     if (iface == config.interface and peak == config.peak_flops
             and scale == config.datapath_scale and bw == config.hbm_bw
-            and vmem == config.vmem_bw):
+            and vmem == config.vmem_bw and cb == config.cost_backend):
         return config
     return replace(config, interface=iface, peak_flops=peak,
-                   datapath_scale=scale, hbm_bw=bw, vmem_bw=vmem)
+                   datapath_scale=scale, hbm_bw=bw, vmem_bw=vmem,
+                   cost_backend=cb)
 
 
 def _link_ports(config: EngineConfig, link: Link) -> float:
@@ -215,7 +230,7 @@ def _resolve_build(config: EngineConfig, topo: SoCTopology) -> _Resolved:
     for d in devices:
         eff = _device_config(config, topo, d)
         key = (eff.interface, eff.peak_flops, eff.datapath_scale,
-               eff.hbm_bw, eff.vmem_bw)
+               eff.hbm_bw, eff.vmem_bw, eff.cost_backend)
         si = sig_key.get(key)
         if si is None:
             si = sig_key[key] = len(sig_cfgs)
@@ -309,7 +324,7 @@ def uniform_class_params(config: EngineConfig, device_class: str) -> bool:
         d = topo.devices[i]
         e = _device_config(config, topo, d)
         sigs.add((e.interface, e.peak_flops, e.datapath_scale, e.hbm_bw,
-                  e.vmem_bw, topo.link_for(d).name))
+                  e.vmem_bw, e.cost_backend, topo.link_for(d).name))
     return len(sigs) <= 1
 
 
@@ -752,8 +767,11 @@ def chain_op_costs(op: CostedOp, config: EngineConfig
     _, exposed, _ = _transfer_base(op, eff, INTERFACES[eff.interface])
     if exposed > 0.0 and ports > 0:
         exposed *= max(1.0, 1 / ports)
-    comp = (op.duration_s if op.duration_s is not None
-            else op.flops / eff.peak_flops)
+    if eff.cost_backend is None:
+        comp = (op.duration_s if op.duration_s is not None
+                else op.flops / eff.peak_flops)
+    else:
+        comp = backends.get_backend(eff.cost_backend).op_time(op, eff)
     coll = (op.collective_bytes / config.ici_bw
             if op.collective_bytes > 0.0 else 0.0)
     return host, exposed, comp, coll
@@ -878,9 +896,14 @@ def _run_events(program: Program, config: EngineConfig, plan: Plan,
         eff0 = sig_cfgs[0]
         iface0 = INTERFACES[eff0.interface]
         peak0 = eff0.peak_flops
-        comp_sig: List[Optional[Dict[str, float]]] = [
-            {nm: (op.duration_s if op.duration_s is not None
-                  else op.flops / peak0) for nm, op in ops.items()}]
+        if eff0.cost_backend is None:
+            comp_sig: List[Optional[Dict[str, float]]] = [
+                {nm: (op.duration_s if op.duration_s is not None
+                      else op.flops / peak0) for nm, op in ops.items()}]
+        else:
+            bk0 = backends.get_backend(eff0.cost_backend)
+            comp_sig = [{nm: bk0.op_time(op, eff0)
+                         for nm, op in ops.items()}]
         xfer_sig: List[Optional[Dict[str, tuple]]] = [
             {nm: _transfer_base(op, eff0, iface0)
              for nm, op in ops.items()}]
@@ -896,6 +919,9 @@ def _run_events(program: Program, config: EngineConfig, plan: Plan,
         xfer_sig = [None] * len(sig_cfgs)
         sig_iface = [INTERFACES[c.interface] for c in sig_cfgs]
         sig_peak = [c.peak_flops for c in sig_cfgs]
+        sig_bk = [None if c.cost_backend is None
+                  else backends.get_backend(c.cost_backend)
+                  for c in sig_cfgs]
         for nm, op in ops.items():
             op_sigs = class_sigs[op.device_class]
             if (op.affinity is not None
@@ -908,7 +934,9 @@ def _run_events(program: Program, config: EngineConfig, plan: Plan,
                     comp_sig[si] = {}
                     xfer_sig[si] = {}
                 comp_sig[si][nm] = (dur if dur is not None
-                                    else op.flops / sig_peak[si])
+                                    else op.flops / sig_peak[si]) \
+                    if sig_bk[si] is None \
+                    else sig_bk[si].op_time(op, sig_cfgs[si])
                 xfer_sig[si][nm] = _transfer_base(op, sig_cfgs[si],
                                                   sig_iface[si])
     host_dispatch = config.host_dispatch_s
@@ -1183,6 +1211,7 @@ def _run_events_fused(program: Program, config: EngineConfig, plan: Plan,
         eff0 = sig_cfgs[0]
         from repro.sim import costmodel
         if (n and eff0.interface in costmodel.CHAIN_INTERFACES
+                and eff0.cost_backend is None
                 and type(config.energy) is EnergyModel
                 and type(eff0.energy) is EnergyModel):
             import numpy as np
@@ -1208,6 +1237,8 @@ def _run_events_fused(program: Program, config: EngineConfig, plan: Plan,
         else:
             iface0 = INTERFACES[eff0.interface]
             peak0 = eff0.peak_flops
+            bk0 = (None if eff0.cost_backend is None
+                   else backends.get_backend(eff0.cost_backend))
             comp_l = [0.0] * n
             full_l = [0.0] * n
             expo_l = [0.0] * n
@@ -1215,8 +1246,9 @@ def _run_events_fused(program: Program, config: EngineConfig, plan: Plan,
             hc_l = [0.0] * n
             for i in cp.priced_idx.tolist():
                 op = op_list[i]
-                comp_l[i] = (op.duration_s if op.duration_s is not None
-                             else op.flops / peak0)
+                comp_l[i] = ((op.duration_s if op.duration_s is not None
+                              else op.flops / peak0) if bk0 is None
+                             else bk0.op_time(op, eff0))
                 full_l[i], expo_l[i], xe_l[i] = _transfer_base(op, eff0,
                                                                iface0)
                 hc_l[i] = host_dispatch + (
@@ -1232,6 +1264,9 @@ def _run_events_fused(program: Program, config: EngineConfig, plan: Plan,
         xfer_sig = [None] * len(sig_cfgs)
         sig_iface = [INTERFACES[c.interface] for c in sig_cfgs]
         sig_peak = [c.peak_flops for c in sig_cfgs]
+        sig_bk = [None if c.cost_backend is None
+                  else backends.get_backend(c.cost_backend)
+                  for c in sig_cfgs]
         for i, op in enumerate(op_list):
             op_sigs = class_sigs[op.device_class]
             if (op.affinity is not None
@@ -1244,7 +1279,9 @@ def _run_events_fused(program: Program, config: EngineConfig, plan: Plan,
                     comp_sig[si] = [0.0] * n
                     xfer_sig[si] = [None] * n
                 comp_sig[si][i] = (dur if dur is not None
-                                   else op.flops / sig_peak[si])
+                                   else op.flops / sig_peak[si]) \
+                    if sig_bk[si] is None \
+                    else sig_bk[si].op_time(op, sig_cfgs[si])
                 xfer_sig[si][i] = _transfer_base(op, sig_cfgs[si],
                                                  sig_iface[si])
         hc_l = [host_dispatch
@@ -1554,6 +1591,7 @@ def _run_chain(program: Program, config: EngineConfig, topo: SoCTopology
               or e.peak_flops != eff.peak_flops
               or e.datapath_scale != eff.datapath_scale
               or e.hbm_bw != eff.hbm_bw or e.vmem_bw != eff.vmem_bw
+              or e.cost_backend != eff.cost_backend
               or l.name != link.name):
             return None
     ports = _link_ports(config, link)
@@ -1568,9 +1606,20 @@ def _run_chain(program: Program, config: EngineConfig, topo: SoCTopology
     if (config.fabric is not None and config.fabric.has_overrides()
             and any(op.tier is not None for op in ops)):
         return None     # explicit per-tier rates: event loop resolves them
+    # non-roofline cost backend: the analytic comp column
+    # ``flops / peak`` is replaced by the backend's per-op pricing —
+    # exactly the values the event loop's hoisted tables would charge,
+    # so the chain fast path stays bit-identical to the slow path
+    comp_over = None
+    if eff.cost_backend is not None:
+        bk = backends.get_backend(eff.cost_backend)
+        comp_over = np.array(
+            [0.0 if op.tier is not None else bk.op_time(op, eff)
+             for op in ops], dtype=np.float64)
     t = costmodel.chain_terms(
         costmodel.op_arrays(ops),
-        costmodel.ChainParams.from_engine(config, eff, ports))
+        costmodel.ChainParams.from_engine(config, eff, ports),
+        comp=comp_over)
     comp, full, xe, factor = t.comp, t.full, t.xe, t.factor
     hc, xfer, cdur = t.hc, t.xfer, t.cdur
     has_h, has_x, has_c = t.has_h, t.has_x, t.has_c

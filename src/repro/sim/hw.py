@@ -72,6 +72,9 @@ class Device:
     hbm_bw: Optional[float] = None           # None -> link bw -> EngineConfig
     vmem_bw: Optional[float] = None          # None -> EngineConfig.vmem_bw
     link: Optional[str] = None               # Link name; None -> first link
+    # per-device compute-cost backend (repro.sim.backends); None inherits
+    # EngineConfig.cost_backend (itself None = the native roofline math)
+    cost_backend: Optional[object] = None
 
 
 @dataclass(frozen=True)

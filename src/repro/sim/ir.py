@@ -83,6 +83,13 @@ class CostedOp:
     tier: Optional[str] = None
     lane: str = "ici"
     hops: float = 1.0
+    # microarchitecture pricing metadata (see ``repro.sim.backends``):
+    # the ``(M, N, K)`` compute-tile shape the op's dot work maps onto a
+    # PE array, and the op family it lowered from ("matmul" | "conv" |
+    # "").  Advisory — the default roofline backend never reads them;
+    # lowerings without tile structure leave them empty.
+    tile: Tuple[int, ...] = ()
+    op_kind: str = ""
 
     @property
     def bytes(self) -> float:
@@ -288,6 +295,19 @@ def from_graph(g, batch: int = 1, max_tile_elems: int = 16384,
         n_tiles = max(tiling.n_tiles, 1)
         n_tiles_of[name] = n_tiles
         reduce_aff = "C" in tiling.strategy and n.op == "convolution"
+        # (M, N, K) compute-tile metadata for the systolic cost backend:
+        # M output rows (spatial elems of one tile), N output channels of
+        # the tile, K the reduction depth (im2col-expanded for convs)
+        op_kind = ("conv" if n.op == "convolution"
+                   else "matmul" if n.op == "matmul" else "")
+        tile_meta: Tuple[int, ...] = ()
+        if op_kind:
+            ts = tiling.tile_shape
+            kern = int(n.attrs.get("kernel", 1)) if op_kind == "conv" \
+                else 1
+            cin = int(n.attrs.get("cin", shape4[3]))
+            tile_meta = (int(ts[0] * ts[1] * ts[2]), int(ts[3]),
+                         kern * kern * cin)
         producers = [d for d in n.inputs
                      if d in g.nodes and g.nodes[d].op not in
                      ("input", "weight")]
@@ -305,7 +325,9 @@ def from_graph(g, batch: int = 1, max_tile_elems: int = 16384,
                 deps=deps,
                 affinity=(name if reduce_aff else None),
                 phase=name,
-                device_class=device_class))
+                device_class=device_class,
+                tile=tile_meta,
+                op_kind=op_kind))
     return Program(ops, name=g.name, source="graph",
                    meta={"batch": batch, "max_tile_elems": max_tile_elems})
 

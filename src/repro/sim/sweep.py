@@ -237,11 +237,12 @@ def _check_batchable(configs: Sequence[EngineConfig]) -> None:
                 or c.energy != base.energy
                 or type(c.energy) is not type(base.energy)
                 or c.vmem_resident_bytes != base.vmem_resident_bytes
-                or c.dma_transfer_bytes != base.dma_transfer_bytes):
+                or c.dma_transfer_bytes != base.dma_transfer_bytes
+                or c.cost_backend != base.cost_backend):
             raise Unsupported(
                 "batched() grids vary only the continuous PARAM_FIELDS; "
-                "interface/energy/tile statics must agree across configs "
-                "(split the grid per interface instead)")
+                "interface/energy/backend/tile statics must agree across "
+                "configs (split the grid per interface instead)")
 
 
 @dataclasses.dataclass

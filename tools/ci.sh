@@ -70,4 +70,11 @@ python -m benchmarks.bench_fleet --quick
 # multi-tier fabric, single-tier fabric bit-identical to the flat config)
 python -m benchmarks.bench_cluster --quick
 
+# calibration smoke: re-measure the quick Pallas-kernel grid within 2x of
+# its BENCH_calibration.json budget + the measured-vs-modeled gates
+# (fitted model beats the uncalibrated roofline on >= 2 of 3 kernels,
+# matmul fitted MAPE under its ceiling, measured table round-trips
+# bit-exactly)
+python -m benchmarks.bench_calibration --quick
+
 echo "CI OK"
